@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            **kwargs) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

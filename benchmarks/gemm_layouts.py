@@ -1,0 +1,55 @@
+"""Paper §3.2 benchmark: distributed GEMM across operand layout pairs.
+
+Times every named algorithm and the auto dispatcher on an 8-device host
+mesh (CPU), and reports the analytic wire bytes the plan moves — the
+quantity that scales to the production mesh.  This is the dMath claim:
+any layout pair works, and the library picks the cheap plan.
+
+Run inside a child process with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(benchmarks/run.py arranges this).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_util import emit, time_fn
+from repro.core import Layout, gemm, precision
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    M = K = N = 1024
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+
+    algos = {
+        "gemm_row_par": lambda: gemm.gemm_row_parallel(a, b, mesh),
+        "gemm_col_par": lambda: gemm.gemm_col_parallel(a, b, mesh),
+        "gemm_inner_psum": lambda: gemm.gemm_inner_psum(a, b, mesh),
+        "gemm_inner_rs": lambda: gemm.gemm_inner_rs(a, b, mesh),
+        "gemm_summa2d": lambda: gemm.gemm_summa2d(a, b, mesh),
+    }
+    for name, fn in algos.items():
+        us = time_fn(fn)
+        emit(f"table_gemm/{name}", us, f"M=K=N={M}")
+
+    layouts = {
+        "rep": Layout.replicated(2),
+        "row": Layout.row_sharded(2, "model"),
+        "col": Layout.col_sharded(2, "model"),
+        "b2d": Layout.blocked_2d(("data", "model")),
+    }
+    for la_name, la in layouts.items():
+        for lb_name, lb in layouts.items():
+            plan = gemm.plan_gemm((M, K), (K, N), jnp.float32, la, lb, mesh)
+            us = time_fn(lambda la=la, lb=lb: gemm.gemm_auto(
+                a, b, la, lb, mesh, policy=precision.FULL)[0])
+            emit(f"table_gemm/auto_{la_name}x{lb_name}", us,
+                 f"alg={plan.algorithm};est_wire={plan.est_bytes}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Kernel-layer benchmark: Pallas (interpret) vs jnp reference.
+
+Times the three TPU kernels in interpret mode against their oracles on
+CPU — correctness-weighted timing only (interpret mode is a Python
+emulator; real kernel perf comes from the TPU target).  The derived field
+reports max abs error vs ref, which IS meaningful everywhere.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_util import emit, time_fn
+from repro.kernels import flash_attention as fa
+from repro.kernels import gemm as kgemm
+from repro.kernels import ref
+from repro.kernels import ssd_scan as kssd
+from repro.models.ssm import ssd_chunked
+
+
+def main():
+    # GEMM
+    a = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.bfloat16)
+    b = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.bfloat16)
+    got = kgemm.matmul(a, b, bm=128, bn=128, bk=256, interpret=True)
+    want = ref.matmul(a, b)
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - want.astype(jnp.float32))))
+    us = time_fn(lambda: ref.matmul(a, b))
+    emit("kernels/gemm_ref_jnp", us, f"pallas_interpret_maxerr={err:.2e}")
+
+    # flash attention
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 256, 64))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.PRNGKey(4), (1, 2, 256, 64))
+    got = fa.attention(q, k, v, causal=True, bq=128, bkv=128, interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(got - want)))
+    us = time_fn(lambda: ref.attention(q, k, v, causal=True))
+    emit("kernels/flash_attention_ref", us,
+         f"pallas_interpret_maxerr={err:.2e}")
+
+    # SSD
+    B, S, H, P, N = 1, 256, 4, 32, 16
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(6), (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(7), (H,)))
+    Bm = jax.random.normal(jax.random.PRNGKey(8), (B, S, 1, N))
+    C = jax.random.normal(jax.random.PRNGKey(9), (B, S, 1, N))
+    y_k, _ = kssd.ssd(x, dt, A, Bm, C, chunk=64, interpret=True)
+    y_r, _ = ref.ssd(x, dt, A, Bm, C)
+    err = float(jnp.max(jnp.abs(y_k - y_r)))
+    us_chunked = time_fn(lambda: ssd_chunked(x, dt, A, Bm, C, chunk=64)[0])
+    us_seq = time_fn(lambda: ref.ssd(x, dt, A, Bm, C)[0])
+    emit("kernels/ssd_chunked_jnp", us_chunked,
+         f"pallas_interpret_maxerr={err:.2e}")
+    emit("kernels/ssd_sequential_oracle", us_seq,
+         f"chunked_speedup={us_seq / us_chunked:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

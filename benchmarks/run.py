@@ -1,0 +1,82 @@
+"""Benchmark harness — one section per paper table/claim.
+
+  table1        Table 1: weak/strong scaling, hybrid vs pure DP
+  gemm          §3.2: distributed GEMM across layout pairs (8 fake devices)
+  precision     §4.2: half-storage numerics + at-par training
+  pipeline      §2.2: auto-tuned data pipeline
+  compression   Table 1 CNTK column: 1-bit/int8 EF gradients (8 fake devices)
+  kernels       Pallas kernels (interpret) vs oracles
+  roofline      §Roofline summary from the dry-run artifacts (if present)
+
+Prints ``name,us_per_call,derived`` CSV.  Multi-device sections re-exec in
+a child with 8 fake host devices so this process keeps the real topology.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+MULTIDEV = {"gemm": "benchmarks.gemm_layouts",
+            "compression": "benchmarks.compression_bench",
+            "table1": "benchmarks.table1"}
+LOCAL = {"precision": "benchmarks.precision_bench",
+         "pipeline": "benchmarks.pipeline_bench",
+         "kernels": "benchmarks.kernels_bench"}
+
+
+def _run_child(module: str) -> int:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [root, os.path.join(root, "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    r = subprocess.run([sys.executable, "-m", module], env=env,
+                       capture_output=True, text=True, timeout=1800)
+    sys.stdout.write(r.stdout)
+    if r.returncode != 0:
+        sys.stderr.write(r.stderr[-3000:])
+        print(f"{module},0.0,FAILED")
+    return r.returncode
+
+
+def _roofline_summary():
+    import json
+    path = "experiments/roofline.json"
+    if not os.path.exists(path):
+        print("roofline/missing,0.0,run launch.dryrun --all first")
+        return
+    rows = json.load(open(path))
+    for r in rows:
+        if r["mesh"] != "16x16":
+            continue
+        print(f"roofline/{r['arch']}_{r['shape']},"
+              f"{1e6 * max(r['t_compute_s'], r['t_memory_s'], r['t_collective_s']):.0f},"
+              f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
+              f"useful={r['useful_ratio']:.3f}")
+
+
+def main(sections=None) -> None:
+    sections = sections or list(LOCAL) + list(MULTIDEV) + ["roofline"]
+    failures = 0
+    for name in sections:
+        if name in LOCAL:
+            mod = __import__(LOCAL[name], fromlist=["main"])
+            mod.main()
+        elif name in MULTIDEV:
+            failures += 1 if _run_child(MULTIDEV[name]) else 0
+        elif name == "roofline":
+            _roofline_summary()
+    if failures:
+        raise SystemExit(f"{failures} benchmark sections failed")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("sections", nargs="*", default=None)
+    args = ap.parse_args()
+    main(args.sections or None)

@@ -1,0 +1,51 @@
+"""Gradient-compressed data parallelism (the paper's CNTK 1-bit column).
+
+Trains a small regression model under exact vs one-bit vs int8 gradient
+all-reduce with error feedback and prints the convergence + modeled wire
+bytes — reduced-precision transfers as a first-class feature (§4.2).
+
+Run:  PYTHONPATH=src python examples/compressed_dp.py
+"""
+
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import make_mesh
+from repro.train.compression import (COMPRESSION_RATIO, build_dp_sgd_step,
+                                     init_error_state)
+
+
+def main():
+    dp = min(len(jax.devices()), 8)
+    mesh = make_mesh((dp,), ("data",))
+    key = jax.random.PRNGKey(0)
+    W_true = jax.random.normal(key, (128, 64)) * 0.3
+    X = jax.random.normal(jax.random.PRNGKey(1), (32 * dp, 128))
+    Y = X @ W_true
+
+    def loss_fn(params, batch):
+        x, y = batch
+        return jnp.mean((x @ params["w"] - y) ** 2)
+
+    grad_bytes = 128 * 64 * 4
+    print(f"DP={dp}, grads {grad_bytes} B/step exact")
+    for scheme in ("none", "onebit", "int8"):
+        params = {"w": jnp.zeros((128, 64))}
+        vel = jax.tree.map(jnp.zeros_like, params)
+        err = init_error_state(params)
+        step = build_dp_sgd_step(loss_fn, mesh, scheme=scheme, lr=0.05)
+        with jax.set_mesh(mesh):
+            for i in range(200):
+                params, vel, err = step(params, vel, err, (X, Y))
+            final = float(loss_fn(params, (X, Y)))
+        print(f"  {scheme:7s} final_loss={final:.6f} "
+              f"wire={int(grad_bytes * COMPRESSION_RATIO[scheme])} B/step")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Batched serving example: prefill + decode with a persistent KV cache.
+
+Builds a reduced gemma3-family model (sliding-window + global layers),
+submits a batch of prompts to the continuous-batching engine, and prints
+throughput — the inference counterpart of train_lm.py.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import run
+
+
+def main():
+    total, dt = run("gemma3-27b", n_requests=6, batch_slots=3,
+                    max_seq=96, prompt_len=12, new_tokens=12,
+                    scale_down=64)
+    assert total >= 6 * 11, "not all requests completed"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Checkpoint-restart with async saves and elastic re-shard (paper §2 req. e).
+
+Layout-independent on disk: each leaf is stored as a full logical array +
+its metadata; restore maps it onto *any* mesh/layout (the §3.3 reshape
+"over the same group of processes or a superset/subset" applied to
+checkpoints — this is what makes restarts elastic on a fleet whose healthy
+node count changed).
+
+Format:  <dir>/step_<N>/
+            manifest.json          tree structure, shapes, dtypes, layouts
+            <flatkey>.npy          one file per leaf
+         <dir>/LATEST              atomic pointer (written last)
+
+Saves run on a background thread (dMath's async replication applied to
+persistence); `wait()` joins before the next save or exit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes  # noqa: F401  (registers bfloat16/fp8 numpy dtypes)
+import numpy as np
+
+
+def _encode(arr: np.ndarray) -> np.ndarray:
+    """Raw-byte view so np.save round-trips ml_dtypes without pickle."""
+    arr = np.ascontiguousarray(arr)
+    if arr.dtype in (np.float32, np.float64, np.int32, np.int64,
+                     np.int8, np.uint8, np.bool_):
+        return arr
+    return arr.view(np.uint8)
+
+
+def _decode(raw: np.ndarray, dtype_str: str, shape) -> np.ndarray:
+    dt = np.dtype(jnp.dtype(dtype_str).name) if dtype_str in (
+        "bfloat16", "float8_e4m3fn", "float8_e5m2") else np.dtype(dtype_str)
+    if raw.dtype == np.uint8:
+        return raw.view(dt).reshape(shape)
+    return raw.reshape(shape)
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any], manifest_tree):
+    if isinstance(manifest_tree, dict) and manifest_tree.get("__leaf__"):
+        return flat[manifest_tree["key"]]
+    if isinstance(manifest_tree, dict):
+        return {k: _unflatten(flat, v) for k, v in manifest_tree.items()}
+    if isinstance(manifest_tree, list):
+        return tuple(_unflatten(flat, v) for v in manifest_tree)
+    raise ValueError(f"bad manifest node {manifest_tree!r}")
+
+
+def _manifest_of(tree, prefix=""):
+    if isinstance(tree, dict):
+        return {k: _manifest_of(tree[k], f"{prefix}{k}/") for k in sorted(tree)}
+    if isinstance(tree, (list, tuple)):
+        return [_manifest_of(v, f"{prefix}{i}/") for i, v in enumerate(tree)]
+    return {"__leaf__": True, "key": prefix[:-1],
+            "shape": list(np.shape(tree)),
+            "dtype": str(np.asarray(jax.device_get(tree)).dtype)
+            if not hasattr(tree, "dtype") else str(tree.dtype)}
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state, blocking: bool = False):
+        """Snapshot to host memory synchronously, write to disk async."""
+        self.wait()
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        manifest = _manifest_of(state)
+
+        def _write():
+            try:
+                tmp = os.path.join(self.dir, f".tmp_step_{step}")
+                final = os.path.join(self.dir, f"step_{step}")
+                shutil.rmtree(tmp, ignore_errors=True)
+                os.makedirs(tmp)
+                for key, arr in _flatten(host).items():
+                    fn = key.replace("/", "__") + ".npy"
+                    np.save(os.path.join(tmp, fn), _encode(arr))
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump({"step": step, "tree": manifest}, f)
+                shutil.rmtree(final, ignore_errors=True)
+                os.rename(tmp, final)
+                with open(os.path.join(self.dir, ".LATEST_tmp"), "w") as f:
+                    f.write(str(step))
+                os.replace(os.path.join(self.dir, ".LATEST_tmp"),
+                           os.path.join(self.dir, "LATEST"))
+                self._gc()
+            except BaseException as e:          # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            _write()
+            self._raise_if_failed()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint write failed: {e}") from e
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        return [int(d.split("_")[1]) for d in os.listdir(self.dir)
+                if d.startswith("step_")]
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(p):
+            return None
+        return int(open(p).read().strip())
+
+    def restore(self, step: Optional[int] = None,
+                shardings: Optional[Any] = None):
+        """Load a checkpoint; if ``shardings`` is given, place each leaf on
+        its (possibly different) target mesh — the elastic re-shard."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat = {}
+        for node in _manifest_leaves(manifest["tree"]):
+            fn = node["key"].replace("/", "__") + ".npy"
+            raw = np.load(os.path.join(d, fn))
+            flat[node["key"]] = _decode(raw, node["dtype"], node["shape"])
+        state = _unflatten(flat, manifest["tree"])
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), state, shardings)
+        return state
+
+
+def _manifest_leaves(tree):
+    if isinstance(tree, dict) and tree.get("__leaf__"):
+        yield tree
+        return
+    vals = tree.values() if isinstance(tree, dict) else tree
+    for v in vals:
+        yield from _manifest_leaves(v)

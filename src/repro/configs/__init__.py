@@ -1,0 +1,88 @@
+"""Architecture registry + input specs.
+
+``input_specs(cfg, shape, mesh, plan)`` returns ShapeDtypeStruct stand-ins
+(+ NamedShardings) for every model input of a cell — weak-type-correct,
+shardable, zero allocation.  The dry-run lowers against these.
+
+Modality frontends are STUBS per the brief: internvl2 receives precomputed
+ViT patch embeddings, musicgen receives EnCodec token ids directly.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .base import (ARCH_IDS, SHAPES, ModelConfig, ShapeConfig, all_archs,
+                   cells, get_config, register)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ModelConfig", "ShapeConfig", "all_archs",
+           "cells", "get_config", "register", "input_specs",
+           "default_microbatches"]
+
+
+def _batch_axes(plan, mesh, B: int):
+    nb = math.prod(mesh.shape[a] for a in plan.batch_axes)
+    return plan.batch_axes if (B % nb == 0 and B >= nb) else None
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, mesh, plan,
+    make_shardings: bool = True,
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (sds_tree, sharding_tree) for the step's *data* inputs.
+
+    train/prefill: {tokens, labels[, vision_embeds]}
+    decode:        {tokens (B,1), pos ()}   (cache/params specs come from
+                                             the Model/optimizer)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    ba = _batch_axes(plan, mesh, B)
+    _ns = (lambda spec: NamedSharding(mesh, spec)) if make_shardings \
+        else (lambda spec: spec)
+    tok_s = _ns(P(ba, None))
+    sds: Dict[str, Any] = {}
+    shd: Dict[str, Any] = {}
+
+    if shape.is_decode:
+        sds["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        shd["tokens"] = tok_s
+        sds["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        shd["pos"] = _ns(P())
+        return sds, shd
+
+    if cfg.family == "vlm":
+        s_text = S - cfg.n_vision_tokens
+        sds["tokens"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+        shd["tokens"] = tok_s
+        sds["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+        shd["vision_embeds"] = _ns(P(ba, None, None))
+    else:
+        sds["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        shd["tokens"] = tok_s
+
+    if shape.kind == "train":
+        sds["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        shd["labels"] = tok_s
+    return sds, shd
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                         plan, budget_bytes: float = 3.0 * 2**30) -> int:
+    """Smallest power-of-two microbatch count keeping the rematerialized
+    residual stream under ``budget_bytes`` per device (gradient
+    accumulation doubles as the ZeRO-2 reduce-scatter cadence)."""
+    if shape.kind != "train":
+        return 1
+    nb = math.prod(mesh.shape[a] for a in plan.batch_axes)
+    b_loc = max(1, shape.global_batch // nb)
+    resid = cfg.n_layers * b_loc * shape.seq_len * cfg.d_model * 2
+    nmb = 1
+    while resid / nmb > budget_bytes and nmb < b_loc:
+        nmb *= 2
+    return nmb

@@ -1,0 +1,15 @@
+"""AlexNet — the paper's own Table-1 architecture (hybrid DP/TP CNN).
+
+Used by benchmarks/table1.py to reproduce the scaling-comparison structure:
+data-parallel conv features + model-parallel FC classifier (ref [8],
+"one weird trick"), which is exactly dMath's hybrid scheme.
+"""
+import dataclasses
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="alexnet", family="conv",
+    n_layers=8, d_model=4096, n_heads=0, n_kv_heads=0,
+    d_ff=4096, vocab_size=1000,       # 1000 ImageNet classes
+    source="NIPS 2012 [5]; paper Table 1",
+))

@@ -1,0 +1,10 @@
+"""gemma-2b — dense, MQA kv=1, GeGLU, head_dim=256 [arXiv:2403.08295; hf]."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma-2b", family="dense",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, head_dim=256,
+    d_ff=16384, vocab_size=256000,
+    act="gelu", emb_scale=True,
+    source="arXiv:2403.08295; hf",
+))

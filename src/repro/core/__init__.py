@@ -1,0 +1,34 @@
+"""repro.core — the dMath distributed linear-algebra substrate in JAX.
+
+Public surface:
+
+- :class:`~repro.core.layout.Layout`, :func:`~repro.core.layout.constrain`
+- :class:`~repro.core.dtensor.DistTensor` (+ global ``REGISTRY``)
+- :func:`~repro.core.redistribute.relayout` / ``relayout_explicit``
+- :func:`~repro.core.gemm.gemm_auto` and the named GEMM algorithms
+- :class:`~repro.core.planner.ParallelPlan` / :func:`~repro.core.planner.plan_for`
+- :mod:`~repro.core.precision` policies, :mod:`~repro.core.rng`
+- :class:`~repro.core.opcache.OpCache`, :class:`~repro.core.autotune.AutoTuner`
+"""
+
+from . import autotune, gemm, memory, opcache, planner, precision, primitives, redistribute, rng
+from .dtensor import DistTensor, REGISTRY, TensorRegistry
+from .layout import Layout, best_divisor_axis, constrain
+from .opcache import GLOBAL_CACHE, OpCache
+from .planner import ParallelPlan, plan_for
+from .precision import FULL, HALF_STORAGE, MIXED, Policy
+from .redistribute import relayout, relayout_explicit, replicate
+from .replication import gathered, replicate_now, use_layout_of, zero_layout, zero_layout_tree
+
+__all__ = [
+    "Layout", "constrain", "best_divisor_axis",
+    "DistTensor", "REGISTRY", "TensorRegistry",
+    "relayout", "relayout_explicit", "replicate",
+    "ParallelPlan", "plan_for",
+    "Policy", "FULL", "MIXED", "HALF_STORAGE",
+    "OpCache", "GLOBAL_CACHE",
+    "zero_layout", "zero_layout_tree", "gathered", "replicate_now",
+    "use_layout_of",
+    "gemm", "precision", "redistribute", "memory", "opcache", "planner",
+    "autotune", "rng", "primitives",
+]

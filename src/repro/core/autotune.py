@@ -1,0 +1,81 @@
+"""Startup autotuning (paper §4.1).
+
+"On startup, dMath automatically selects the optimal convolution algorithm
+based on timing samples and system constraints."  The same mechanism here
+selects among candidate implementations (GEMM algorithm for a layout pair,
+Pallas block shape, remat policy) by timing each candidate a few times and
+pinning the winner in the op cache.  A memory ceiling disqualifies
+candidates whose workspace would not fit — the paper's "system constraints"
+(their asterisked sub-optimal AlexNet point is exactly this ceiling firing).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+
+
+@dataclasses.dataclass
+class Candidate:
+    name: str
+    fn: Callable[..., Any]
+    workspace_bytes: int = 0
+
+
+@dataclasses.dataclass
+class TuneResult:
+    name: str
+    us_per_call: float
+    disqualified: Tuple[str, ...] = ()
+
+
+class AutoTuner:
+    """Times candidates, honours a memory budget, memoizes the choice."""
+
+    def __init__(self, budget_bytes: Optional[int] = None, warmup: int = 1,
+                 iters: int = 3):
+        self.budget_bytes = budget_bytes
+        self.warmup = warmup
+        self.iters = iters
+        self._choices: Dict[Any, TuneResult] = {}
+
+    def pick(self, key: Any, candidates: Sequence[Candidate],
+             *args, **kwargs) -> TuneResult:
+        if key in self._choices:
+            return self._choices[key]
+
+        disq = []
+        best: Optional[Tuple[float, Candidate]] = None
+        for cand in candidates:
+            if (self.budget_bytes is not None
+                    and cand.workspace_bytes > self.budget_bytes):
+                disq.append(cand.name)
+                continue
+            try:
+                for _ in range(self.warmup):
+                    jax.block_until_ready(cand.fn(*args, **kwargs))
+                t0 = time.perf_counter()
+                for _ in range(self.iters):
+                    jax.block_until_ready(cand.fn(*args, **kwargs))
+                dt = (time.perf_counter() - t0) / self.iters * 1e6
+            except Exception:
+                disq.append(cand.name)
+                continue
+            if best is None or dt < best[0]:
+                best = (dt, cand)
+
+        if best is None:
+            raise RuntimeError(
+                f"autotune: every candidate disqualified for {key}: {disq}")
+        result = TuneResult(best[1].name, best[0], tuple(disq))
+        self._choices[key] = result
+        return result
+
+    def choices(self) -> Dict[Any, TuneResult]:
+        return dict(self._choices)
+
+
+GLOBAL_TUNER = AutoTuner()

@@ -1,0 +1,147 @@
+"""DistTensor: the user-facing distributed array (paper §2, §2.1).
+
+dMath's programming model: "the developer uses dMath like any other
+mathematics library; the distributed computation is handled internally".
+A :class:`DistTensor` pairs a global ``jax.Array`` with its :class:`Layout`
+and registers itself in a process-wide :class:`TensorRegistry`, the analogue
+of every worker knowing the layout of every matrix (§2.1).
+
+Arithmetic dispatches through the layout-aware kernels in ``core.gemm`` /
+``core.redistribute``; ``@``, ``+``, ``*`` work without the caller knowing
+the distribution — the master/worker split is hidden exactly as in the
+paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from . import precision
+from .gemm import gemm_auto
+from .layout import Layout
+from .redistribute import relayout, relayout_explicit
+
+
+class TensorRegistry:
+    """name -> (shape, dtype, layout): the global layout table of §2.1."""
+
+    def __init__(self):
+        self._table: Dict[str, tuple] = {}
+        self._lock = threading.Lock()
+
+    def register(self, name: str, shape, dtype, layout: Layout):
+        with self._lock:
+            self._table[name] = (tuple(shape), jnp.dtype(dtype), layout)
+
+    def lookup(self, name: str):
+        return self._table.get(name)
+
+    def layouts(self) -> Dict[str, Layout]:
+        return {k: v[2] for k, v in self._table.items()}
+
+    def __len__(self):
+        return len(self._table)
+
+
+REGISTRY = TensorRegistry()
+_ANON = [0]
+
+
+@dataclasses.dataclass
+class DistTensor:
+    """A global array + its layout + the mesh it lives on."""
+
+    data: jax.Array
+    layout: Layout
+    mesh: Mesh
+    name: Optional[str] = None
+    policy: precision.Policy = precision.MIXED
+
+    def __post_init__(self):
+        if self.name is None:
+            _ANON[0] += 1
+            self.name = f"tensor_{_ANON[0]}"
+        REGISTRY.register(self.name, self.data.shape, self.data.dtype, self.layout)
+
+    # -- construction -------------------------------------------------------
+    @staticmethod
+    def shard(data: jax.Array, layout: Layout, mesh: Mesh,
+              name: Optional[str] = None, **kw) -> "DistTensor":
+        data = jax.device_put(data, layout.sharding(mesh))
+        return DistTensor(data, layout, mesh, name=name, **kw)
+
+    # -- views --------------------------------------------------------------
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def bytes_per_device(self) -> int:
+        return self.layout.bytes_per_device(self.shape, self.dtype, self.mesh)
+
+    # -- redistribution (§3.3) ----------------------------------------------
+    def with_layout(self, dst: Layout, dtype=None, explicit: bool = False
+                    ) -> "DistTensor":
+        if explicit:
+            arr = relayout_explicit(self.data, self.layout, dst, self.mesh, dtype)
+        else:
+            arr = relayout(self.data, dst, self.mesh, dtype, src=self.layout)
+        return DistTensor(jax.device_put(arr, dst.sharding(self.mesh)),
+                          dst, self.mesh, name=f"{self.name}@{dst}",
+                          policy=self.policy)
+
+    def replicated(self) -> "DistTensor":
+        return self.with_layout(Layout.replicated(self.data.ndim))
+
+    # -- math (layout-independent, §3.2) -------------------------------------
+    def matmul(self, other: "DistTensor",
+               out_layout: Optional[Layout] = None) -> "DistTensor":
+        c, plan = gemm_auto(
+            self.data, other.data, self.layout, other.layout, self.mesh,
+            out_layout=out_layout, policy=self.policy,
+        )
+        lay = out_layout if out_layout is not None else plan.out_layout
+        return DistTensor(c, lay, self.mesh,
+                          name=f"({self.name}@{other.name})", policy=self.policy)
+
+    def __matmul__(self, other: "DistTensor") -> "DistTensor":
+        return self.matmul(other)
+
+    def _ewise(self, other, op):
+        if isinstance(other, DistTensor):
+            o = other
+            if o.layout != self.layout:
+                o = o.with_layout(self.layout)
+            arr = op(self.data, o.data)
+        else:
+            arr = op(self.data, other)
+        return DistTensor(arr, self.layout, self.mesh, policy=self.policy)
+
+    def __add__(self, other):
+        return self._ewise(other, jnp.add)
+
+    def __sub__(self, other):
+        return self._ewise(other, jnp.subtract)
+
+    def __mul__(self, other):
+        return self._ewise(other, jnp.multiply)
+
+    def sum(self, axis=None):
+        return jnp.sum(self.data, axis=axis)
+
+    def to_global(self) -> jax.Array:
+        """Gather to a fully-replicated host-visible array."""
+        return self.replicated().data
+
+    def __repr__(self):
+        return (f"DistTensor({self.name}, shape={tuple(self.shape)}, "
+                f"dtype={self.dtype}, layout={self.layout})")

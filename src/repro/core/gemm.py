@@ -1,0 +1,298 @@
+"""Layout-dispatched distributed GEMM (paper §3.2).
+
+dMath's defining property: GEMM is *correct for any operand layouts* — the
+library inspects the distributions, chooses an algorithm, and performs any
+communication needed to make the operands compatible, instead of requiring
+the caller to pre-arrange layouts (as ScaLAPACK-era libraries did).
+
+Algorithms (classic distributed-GEMM taxonomy, chosen by layout pair):
+
+  name         A layout      B layout      C layout      comm
+  ----------   -----------   -----------   -----------   -------------------
+  local        compatible    compatible    inherited     none
+  row_par      L[ax,-]       L[-,-]        L[ax,-]       none
+  col_par      L[-,-]        L[-,ax]       L[-,ax]       none
+  inner_psum   L[-,ax]       L[ax,-]       L[-,-]        all-reduce(C)
+  inner_rs     L[-,ax]       L[ax,-]       L[ax,-]       reduce-scatter(C)
+  summa2d      L[r,c]        L[r,c]        L[r,c]        all-gather(A, c) +
+                                                         all-gather(B, r)
+  auto         anything      anything      requested     minimal relayouts +
+                                                         one of the above
+
+``auto`` is the paper's remapping service: it costs each candidate (analytic
+wire bytes, the same model the roofline uses) and picks the cheapest plan.
+Plans are memoized in the op cache under (shapes, layouts, mesh) — §3.3's
+cached metadata identifiers.
+
+Every algorithm takes a :class:`~repro.core.precision.Policy` so storage can
+be bf16 while the MXU accumulates fp32 (paper §4.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from . import precision
+from .layout import Layout, constrain
+from .opcache import GLOBAL_CACHE
+from .redistribute import collective_bytes_estimate, relayout_explicit
+
+
+# --------------------------------------------------------------------------
+# shard_map algorithm bodies (explicit collectives — the reference semantics)
+# --------------------------------------------------------------------------
+
+def _local_mm(a, b, policy):
+    return precision.matmul(a, b, policy=policy)
+
+
+def gemm_row_parallel(a, b, mesh: Mesh, axis: str = "model",
+                      policy: precision.Policy = precision.MIXED):
+    """A row-sharded, B replicated -> C row-sharded.  Zero communication."""
+    out = jax.shard_map(
+        partial(_local_mm, policy=policy), check_vma=False, mesh=mesh,
+        in_specs=(Layout.row_sharded(2, axis).spec, Layout.replicated(2).spec),
+        out_specs=Layout.row_sharded(2, axis).spec,
+    )(a, b)
+    return out
+
+
+def gemm_col_parallel(a, b, mesh: Mesh, axis: str = "model",
+                      policy: precision.Policy = precision.MIXED):
+    """A replicated, B col-sharded -> C col-sharded.  Zero communication."""
+    return jax.shard_map(
+        partial(_local_mm, policy=policy), check_vma=False, mesh=mesh,
+        in_specs=(Layout.replicated(2).spec, Layout.col_sharded(2, axis).spec),
+        out_specs=Layout.col_sharded(2, axis).spec,
+    )(a, b)
+
+
+def gemm_inner_psum(a, b, mesh: Mesh, axis: str = "model",
+                    policy: precision.Policy = precision.MIXED):
+    """A K-sharded, B K-sharded -> C replicated via all-reduce.
+
+    The partial products are accumulated in ``policy.accum_dtype`` and the
+    all-reduce runs in ``policy.reduce_dtype`` — dMath's reduced-precision
+    wire format with full-precision accumulation.
+    """
+    def body(la, lb):
+        part = _local_mm(la, lb, policy).astype(policy.reduce_dtype)
+        return jax.lax.psum(part, axis)
+
+    return jax.shard_map(
+        body, check_vma=False, mesh=mesh,
+        in_specs=(Layout.col_sharded(2, axis).spec, Layout.row_sharded(2, axis).spec),
+        out_specs=Layout.replicated(2).spec,
+    )(a, b)
+
+
+def gemm_inner_rs(a, b, mesh: Mesh, axis: str = "model",
+                  policy: precision.Policy = precision.MIXED):
+    """A K-sharded, B K-sharded -> C row-sharded via reduce-scatter.
+
+    Moves 1/n of the all-reduce bytes; the building block of Megatron-style
+    row-parallel layers with sequence-parallel outputs.
+    """
+    def body(la, lb):
+        part = _local_mm(la, lb, policy).astype(policy.reduce_dtype)
+        return jax.lax.psum_scatter(part, axis, scatter_dimension=0, tiled=True)
+
+    return jax.shard_map(
+        body, check_vma=False, mesh=mesh,
+        in_specs=(Layout.col_sharded(2, axis).spec, Layout.row_sharded(2, axis).spec),
+        out_specs=Layout.row_sharded(2, axis).spec,
+    )(a, b)
+
+
+def gemm_summa2d(a, b, mesh: Mesh, axes: Tuple[str, str] = ("data", "model"),
+                 policy: precision.Policy = precision.MIXED):
+    """2-D blocked SUMMA: A, B, C all blocked over (rows=axes[0], cols=axes[1]).
+
+    The all-gather formulation: each (r, c) block gathers A's row-panel along
+    the column axis and B's col-panel along the row axis, then one local
+    GEMM.  Wire bytes match the k-step broadcast pipeline of classic SUMMA;
+    XLA's latency-hiding scheduler recovers the overlap the k-step loop
+    provides on MPI.
+    """
+    r_ax, c_ax = axes
+
+    def body(la, lb):
+        # la: (M/r, K/c) — gather along c to get (M/r, K)
+        arow = jax.lax.all_gather(la, c_ax, axis=1, tiled=True)
+        # lb: (K/r, N/c) — gather along r to get (K, N/c)
+        bcol = jax.lax.all_gather(lb, r_ax, axis=0, tiled=True)
+        return _local_mm(arow, bcol, policy)
+
+    blocked = Layout.blocked_2d((r_ax, c_ax)).spec
+    return jax.shard_map(
+        body, check_vma=False, mesh=mesh, in_specs=(blocked, blocked), out_specs=blocked,
+    )(a, b)
+
+
+# --------------------------------------------------------------------------
+# auto dispatch — the remapping service
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    algorithm: str
+    a_relayout: Optional[Layout]
+    b_relayout: Optional[Layout]
+    out_layout: Layout
+    est_bytes: int                      # analytic wire bytes per device
+
+    def describe(self) -> str:
+        return (f"{self.algorithm} (A->{self.a_relayout} B->{self.b_relayout} "
+                f"C={self.out_layout}, ~{self.est_bytes/2**20:.1f} MiB/device)")
+
+
+def _est(shape, dtype, src, dst, mesh):
+    if src == dst or dst is None:
+        return 0
+    return collective_bytes_estimate(shape, dtype, src, dst, mesh)
+
+
+def plan_gemm(
+    a_shape, b_shape, dtype,
+    a_layout: Layout, b_layout: Layout,
+    mesh: Mesh,
+    out_layout: Optional[Layout] = None,
+    axis: str = "model",
+) -> GemmPlan:
+    """Choose the cheapest algorithm + relayouts for (a_layout, b_layout).
+
+    Candidates are costed with the analytic collective model; ties break
+    toward fewer relayouts.  This is dMath's layout-independence: any input
+    pair yields a correct plan.
+    """
+    m, k = a_shape
+    k2, n = b_shape
+    assert k == k2, f"inner dims mismatch {a_shape} x {b_shape}"
+    rep = Layout.replicated(2)
+    row = Layout.row_sharded(2, axis)
+    col = Layout.col_sharded(2, axis)
+    out_bytes = m * n * jnp.dtype(dtype).itemsize
+
+    cands = []
+
+    def add(alg, a_to, b_to, c_layout, extra=0):
+        cost = (_est(a_shape, dtype, a_layout, a_to, mesh)
+                + _est(b_shape, dtype, b_layout, b_to, mesh) + extra)
+        if out_layout is not None and c_layout != out_layout:
+            cost += _est((m, n), dtype, c_layout, out_layout, mesh)
+            c_final = out_layout
+        else:
+            c_final = c_layout
+        cands.append(GemmPlan(alg, a_to, b_to, c_final, cost))
+
+    nmodel = mesh.shape.get(axis, 1)
+    # row-parallel: A row-sharded, B replicated
+    if m % nmodel == 0:
+        add("row_par", row, rep, row)
+    # col-parallel: A replicated, B col-sharded
+    if n % nmodel == 0:
+        add("col_par", rep, col, col)
+    # inner-product: K sharded on both; all-reduce C
+    if k % nmodel == 0:
+        add("inner_psum", col, row, rep, extra=out_bytes * (nmodel - 1) // nmodel)
+        if m % nmodel == 0:
+            add("inner_rs", col, row, row,
+                extra=(out_bytes // nmodel) * (nmodel - 1) // nmodel)
+    # SUMMA over (data, model) when 2-D blocking divides
+    daxis = "data"
+    if daxis in mesh.shape and axis in mesh.shape:
+        r, c = mesh.shape[daxis], mesh.shape[axis]
+        if m % r == 0 and k % (r * c) == 0 and n % c == 0:
+            blocked = Layout.blocked_2d((daxis, axis))
+            ag_a = (m // r) * k * jnp.dtype(dtype).itemsize * (c - 1) // c
+            ag_b = k * (n // c) * jnp.dtype(dtype).itemsize * (r - 1) // r
+            add("summa2d", blocked, blocked, blocked, extra=ag_a + ag_b)
+    # always-valid fallback: replicate everything
+    add("local", rep, rep, rep)
+
+    cands.sort(key=lambda p: p.est_bytes)
+    return cands[0]
+
+
+_ALGOS = {
+    "row_par": gemm_row_parallel,
+    "col_par": gemm_col_parallel,
+    "inner_psum": gemm_inner_psum,
+    "inner_rs": gemm_inner_rs,
+}
+
+
+def gemm_auto(
+    a: jax.Array, b: jax.Array,
+    a_layout: Layout, b_layout: Layout,
+    mesh: Mesh,
+    out_layout: Optional[Layout] = None,
+    axis: str = "model",
+    policy: precision.Policy = precision.MIXED,
+    cache=GLOBAL_CACHE,
+) -> Tuple[jax.Array, GemmPlan]:
+    """Distributed GEMM for arbitrary operand layouts.
+
+    Returns (C, plan).  The plan (algorithm + relayouts) is memoized by
+    semantic key; re-issuing the same op replays the cached plan without
+    re-planning — §3.3's cached identifiers.
+    """
+    key = cache.key_for(
+        "gemm_auto", (a, b), (a_layout, b_layout, out_layout),
+        tuple(mesh.shape.items()), axis=axis,
+    )
+    plan = cache.get_or_build(
+        key, "gemm_auto",
+        lambda: plan_gemm(a.shape, b.shape, a.dtype, a_layout, b_layout,
+                          mesh, out_layout, axis),
+    )
+
+    if plan.a_relayout is not None and plan.a_relayout != a_layout:
+        a = relayout_explicit(a, a_layout, plan.a_relayout, mesh)
+    if plan.b_relayout is not None and plan.b_relayout != b_layout:
+        b = relayout_explicit(b, b_layout, plan.b_relayout, mesh)
+
+    if plan.algorithm == "local":
+        c = precision.matmul(a, b, policy=policy)
+    elif plan.algorithm == "summa2d":
+        c = gemm_summa2d(a, b, mesh, policy=policy)
+    else:
+        c = _ALGOS[plan.algorithm](a, b, mesh, axis=axis, policy=policy)
+
+    if out_layout is not None:
+        cur = plan.out_layout if plan.algorithm != "local" else Layout.replicated(2)
+        if cur != out_layout:
+            c = relayout_explicit(c, cur, out_layout, mesh)
+        else:
+            c = constrain(c, out_layout, mesh)
+    return c, plan
+
+
+# --------------------------------------------------------------------------
+# GSPMD path used inside model code: constraint-steered einsum.
+# --------------------------------------------------------------------------
+
+def sharded_matmul(
+    x: jax.Array, w: jax.Array,
+    w_layout: Layout, out_layout: Optional[Layout] = None,
+    policy: precision.Policy = precision.MIXED,
+):
+    """Inside-jit matmul with layout hints (production model path).
+
+    The weight carries its storage layout; the output constraint tells GSPMD
+    which algorithm to realize (col-parallel / row-parallel+RS / ...).  This
+    is the same dispatch as :func:`gemm_auto` with the collective insertion
+    delegated to the partitioner.
+    """
+    w = constrain(w, w_layout)
+    out = precision.matmul(x, w, policy=policy)
+    if out_layout is not None:
+        out = constrain(out, out_layout)
+    return out

@@ -1,0 +1,99 @@
+"""Memory accounting and donation helpers (paper §2.1).
+
+dMath pools unused GPU memory to avoid CUDA alloc/IB-registration costs and
+keeps operands persistent on device.  Under XLA the arena allocator plays the
+pool's role and buffer *donation* gives in-place update steps; what remains
+for the framework is (a) making donation systematic and (b) a footprint model
+that predicts per-device bytes for a (config, layout plan, mesh) triple
+before anything is allocated — used by the planner to refuse OOM plans and by
+the dry-run report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layout import Layout
+
+HBM_BYTES_V5E = 16 * 1024**3  # TPU v5e per-chip HBM
+
+
+def nbytes(shape, dtype) -> int:
+    return math.prod(shape) * jnp.dtype(dtype).itemsize
+
+
+@dataclasses.dataclass
+class Footprint:
+    """Per-device byte budget, by category."""
+
+    params: int = 0
+    optimizer: int = 0
+    gradients: int = 0
+    activations: int = 0
+    kv_cache: int = 0
+    workspace: int = 0
+
+    @property
+    def total(self) -> int:
+        return (self.params + self.optimizer + self.gradients
+                + self.activations + self.kv_cache + self.workspace)
+
+    def fits(self, budget: int = HBM_BYTES_V5E, headroom: float = 0.9) -> bool:
+        return self.total <= budget * headroom
+
+    def report(self) -> str:
+        gib = 1024**3
+        rows = [
+            ("params", self.params), ("optimizer", self.optimizer),
+            ("gradients", self.gradients), ("activations", self.activations),
+            ("kv_cache", self.kv_cache), ("workspace", self.workspace),
+            ("TOTAL", self.total),
+        ]
+        return "\n".join(f"  {k:<12} {v / gib:8.3f} GiB" for k, v in rows)
+
+
+class Ledger:
+    """Running account of device-resident tensors by (name -> bytes/device).
+
+    The dry-run fills one from abstract values; training fills one from real
+    arrays.  It is the bookkeeping side of "persistent storage of operands".
+    """
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None):
+        self.mesh = mesh
+        self.entries: Dict[str, int] = {}
+
+    def add(self, name: str, shape, dtype, layout: Optional[Layout] = None) -> int:
+        if layout is not None and self.mesh is not None:
+            b = layout.bytes_per_device(shape, dtype, self.mesh)
+        else:
+            b = nbytes(shape, dtype)
+        self.entries[name] = self.entries.get(name, 0) + b
+        return b
+
+    def add_tree(self, name: str, tree, layouts=None) -> int:
+        leaves = jax.tree.leaves(tree)
+        lls = jax.tree.leaves(layouts) if layouts is not None else [None] * len(leaves)
+        total = 0
+        for i, (leaf, ll) in enumerate(zip(leaves, lls)):
+            total += self.add(f"{name}/{i}", leaf.shape, leaf.dtype, ll)
+        return total
+
+    @property
+    def total(self) -> int:
+        return sum(self.entries.values())
+
+
+def donate_state(fn, state_argnum: int = 0):
+    """Donate the state argument so updates are in-place (the pool analogue)."""
+    return jax.jit(fn, donate_argnums=(state_argnum,))
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(nbytes(x.shape, x.dtype) for x in jax.tree.leaves(tree)
+               if hasattr(x, "shape"))

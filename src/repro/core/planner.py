@@ -1,0 +1,220 @@
+"""Per-architecture layout planner — hybrid parallelism (paper §4, ref [8]).
+
+dMath trains with *hybrid* data/model parallelism (Krizhevsky's one-weird-
+trick: DP where activations dominate, MP where parameters dominate).  The
+planner generalizes that decision to the 2026 menagerie on a fixed named
+mesh:
+
+  batch        -> ("pod", "data")                     (pure DP axes)
+  FFN / vocab  -> "model"                             (tensor parallel)
+  attention    -> "model" on heads if head counts divide the axis, else
+                  sequence-parallel over "model" (SP) — JAX requires exact
+                  divisibility, so this is the layout the remapping service
+                  *must* pick (paper §3.2: "the shape of the data and
+                  concurrency can affect the performance")
+  MoE experts  -> "model" (expert parallel, replicated routing + psum)
+  SSD heads    -> "model"
+  storage      -> optional parameter sharding over "data" (FSDP/ZeRO-3
+                  style) when the per-device TP shard would not fit HBM —
+                  the paper's replication-on-demand (§2.1): gather at use,
+                  overlapped with compute by the scheduler
+
+Decode always uses flash-decoding layout: the KV cache is sharded on the
+*sequence* dim over "model" (head-replication would not fit HBM at 32k×128).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+from jax.sharding import Mesh
+
+from .layout import Layout
+
+GiB = 1024**3
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    """All layout decisions for one (config, mesh, shape) cell."""
+
+    batch_axes: Tuple[str, ...]         # ("data",) or ("pod", "data")
+    tp_axis: str                        # tensor/expert/sequence axis
+    attn_mode: str                      # "head_tp" | "sp" | "none"
+    fsdp: bool                          # shard weight storage over data axis
+    seq_parallel_residual: bool         # shard residual stream on seq dim
+    ffn_replicated: bool = False        # SP small-FFN: fully local MLP
+    fsdp_axis: str = "data"
+    n_layers: int = 1                   # for per-tensor FSDP sizing
+    fsdp_tensor_bytes: float = 4 * GiB  # FSDP only stacks bigger than this
+
+    # ---- parameter layouts --------------------------------------------------
+    def _maybe_fsdp(self, layout: Layout, shape, mesh: Mesh, dim: int) -> Layout:
+        """Shard ``dim`` over the FSDP axis — but only for tensors whose
+        whole-stack use-time footprint exceeds ``fsdp_tensor_bytes``.
+
+        Per-tensor FSDP: re-gathering weights every microbatch is the
+        dominant wire cost at high accumulation counts (measured 89 s of
+        collective time on dbrx train_4k when EVERYTHING was FSDP'd);
+        small stacks are cheaper kept resident.
+        """
+        if not self.fsdp or layout.dims[dim] is not None:
+            return layout
+        if self.fsdp_axis in layout.mesh_axes_used():
+            return layout
+        import math as _m
+        tp_shards = 1
+        for ax in layout.mesh_axes_used():
+            tp_shards *= mesh.shape.get(ax, 1)
+        use_bytes = 2.0 * _m.prod(shape) * self.n_layers / tp_shards
+        if use_bytes < self.fsdp_tensor_bytes:
+            return layout
+        n = mesh.shape.get(self.fsdp_axis, 1)
+        if shape[dim] % n == 0:
+            return layout.with_dim(dim, self.fsdp_axis)
+        return layout
+
+    def embed(self, shape, mesh) -> Layout:
+        # (V, D): shard D so the token gather is comm-free; FSDP on V.
+        return self._maybe_fsdp(Layout((None, self.tp_axis)), shape, mesh, 0)
+
+    def unembed(self, shape, mesh) -> Layout:
+        # (D, V): vocab-TP (the paper's model-parallel FC classifier).
+        return self._maybe_fsdp(Layout((None, self.tp_axis)), shape, mesh, 0)
+
+    def attn_qkv(self, shape, mesh) -> Layout:
+        # (D, H, hd) col-parallel on heads, or replicated under SP.
+        if self.attn_mode == "head_tp":
+            return self._maybe_fsdp(
+                Layout((None, self.tp_axis, None)), shape, mesh, 0)
+        return self._maybe_fsdp(Layout((None, None, None)), shape, mesh, 0)
+
+    def attn_out(self, shape, mesh) -> Layout:
+        # (H, hd, D) row-parallel on heads.
+        if self.attn_mode == "head_tp":
+            return self._maybe_fsdp(
+                Layout((self.tp_axis, None, None)), shape, mesh, 2)
+        return self._maybe_fsdp(Layout((None, None, None)), shape, mesh, 2)
+
+    def ffn_in(self, shape, mesh) -> Layout:      # (D, F) col-parallel
+        if self.ffn_replicated:
+            return self._maybe_fsdp(Layout((None, None)), shape, mesh, 0)
+        return self._maybe_fsdp(Layout((None, self.tp_axis)), shape, mesh, 0)
+
+    def ffn_out(self, shape, mesh) -> Layout:     # (F, D) row-parallel
+        if self.ffn_replicated:
+            return self._maybe_fsdp(Layout((None, None)), shape, mesh, 1)
+        return self._maybe_fsdp(Layout((self.tp_axis, None)), shape, mesh, 1)
+
+    def experts(self, shape, mesh) -> Layout:     # (E, D, F) expert-parallel
+        return self._maybe_fsdp(
+            Layout((self.tp_axis, None, None)), shape, mesh, 1)
+
+    def router(self, shape, mesh) -> Layout:      # (D, E) replicated
+        return Layout((None, None))
+
+    def vector(self, shape, mesh) -> Layout:      # norms, biases: replicated
+        return Layout.replicated(len(shape))
+
+    def head_vector(self, shape, mesh) -> Layout:
+        # per-head scalars (SSD A, dt_bias, D-skip): (H,) over model
+        n = mesh.shape.get(self.tp_axis, 1)
+        if shape[0] % n == 0:
+            return Layout((self.tp_axis,))
+        return Layout((None,))
+
+    def conv1d(self, shape, mesh) -> Layout:      # (width, channels)
+        n = mesh.shape.get(self.tp_axis, 1)
+        if shape[-1] % n == 0:
+            return Layout((None,) * (len(shape) - 1) + (self.tp_axis,))
+        return Layout.replicated(len(shape))
+
+    # ---- activation layouts -------------------------------------------------
+    def hidden(self, seq_sharded: Optional[bool] = None) -> Layout:
+        # (B, S, D) residual stream
+        seq = self.seq_parallel_residual if seq_sharded is None else seq_sharded
+        return Layout((self.batch_axes, self.tp_axis if seq else None, None))
+
+    def heads_act(self) -> Layout:
+        # (B, S, H, hd) attention activations under head-TP
+        return Layout((self.batch_axes, None, self.tp_axis, None))
+
+    def seq_act(self) -> Layout:
+        # (B, S, ...) under SP: sequence over model axis
+        return Layout((self.batch_axes, self.tp_axis, None, None))
+
+    def logits(self) -> Layout:
+        return Layout((self.batch_axes, None, self.tp_axis))
+
+    def tokens(self) -> Layout:
+        return Layout((self.batch_axes, None))
+
+    def kv_cache(self, batch: int, mesh: Mesh) -> Layout:
+        """(L|sites, B, S, Hkv, hd): flash-decoding layout, seq over model.
+
+        When the batch cannot use the data axes (long-context, batch=1) the
+        sequence dim takes every spare axis so HBM per chip stays bounded.
+        """
+        nb = math.prod(mesh.shape[a] for a in self.batch_axes)
+        if batch % nb == 0 and batch >= nb:
+            return Layout((None, self.batch_axes, self.tp_axis, None, None))
+        seq_axes = tuple(self.batch_axes) + (self.tp_axis,)
+        return Layout((None, None, seq_axes, None, None))
+
+    def ssm_state(self, batch: int, mesh: Mesh) -> Layout:
+        """(L, B, H, hd, N) decode state: heads over model."""
+        nb = math.prod(mesh.shape[a] for a in self.batch_axes)
+        b_ax = self.batch_axes if batch % nb == 0 and batch >= nb else None
+        return Layout((None, b_ax, self.tp_axis, None, None))
+
+
+def plan_for(cfg, mesh: Mesh, *, fsdp_tensor_bytes: float = 4 * GiB,
+             seq_parallel_residual: Optional[bool] = None) -> ParallelPlan:
+    """Build the plan for a model config on a mesh (the planner proper)."""
+    tp_axis = "model"
+    tp = mesh.shape.get(tp_axis, 1)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    # Attention mode: head-TP only if both head counts divide the axis;
+    # attention-free (SSM) archs have no attention layout at all.
+    n_heads = getattr(cfg, "n_heads", 0) or 0
+    n_kv = getattr(cfg, "n_kv_heads", 0) or 0
+    if n_heads == 0:
+        attn_mode = "none"
+    elif n_heads % tp == 0 and n_kv % tp == 0:
+        attn_mode = "head_tp"
+    else:
+        attn_mode = "sp"
+
+    # FSDP is gated per-tensor (see _maybe_fsdp); the plan-level flag just
+    # enables the mechanism.
+    fsdp = True
+
+    if seq_parallel_residual is None:
+        # Sequence-sharded residuals for every mode (Megatron-SP): the
+        # alternative — batch-sharded residuals with fp32 (B,S,D)
+        # all-reduces at every row-parallel output — measured 1.4 TB/step
+        # of wire on gemma3 train_4k (EXPERIMENTS §Perf iteration 4).
+        seq_parallel_residual = True
+
+    # SP archs have replicated weights at use anyway; when the whole FFN
+    # bank fits per-device, keep it replicated and make the MLP fully
+    # LOCAL over the sequence shards — this removed >90% of layer
+    # collectives on qwen2 train_4k (EXPERIMENTS §Perf iteration 2).
+    ffn_replicated = False
+    if attn_mode == "sp" and getattr(cfg, "d_ff", 0):
+        ffn_bytes = 2 * 3 * cfg.n_layers * cfg.d_model * cfg.d_ff
+        ffn_replicated = ffn_bytes < 4 * GiB
+
+    return ParallelPlan(
+        batch_axes=batch_axes,
+        tp_axis=tp_axis,
+        attn_mode=attn_mode,
+        fsdp=fsdp,
+        seq_parallel_residual=seq_parallel_residual,
+        ffn_replicated=ffn_replicated,
+        n_layers=max(1, getattr(cfg, "n_layers", 1)),
+        fsdp_tensor_bytes=fsdp_tensor_bytes,
+    )

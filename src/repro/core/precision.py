@@ -1,0 +1,79 @@
+"""Mixed-precision policies (paper §4.2).
+
+dMath stores operands in half precision and computes in float where the
+hardware lacks native half compute ("mixed-mode ... values are stored in half
+and upcast to float before computation").  On TPU the same split is native:
+**bf16 storage / fp32 MXU accumulation**, plus fp32 master weights in the
+optimizer.  A :class:`Policy` names the dtype at each boundary; layers consult
+it instead of hard-coding dtypes, and the data pipeline uses
+:func:`lazy_promote` so precision is raised as late as possible (paper §2.2,
+"promotion of data to higher precision types is done lazily").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Dtype at each storage/compute boundary."""
+
+    param_dtype: Any = jnp.bfloat16      # persistent storage of weights
+    compute_dtype: Any = jnp.bfloat16    # matmul operand dtype
+    accum_dtype: Any = jnp.float32       # matmul accumulation (MXU native)
+    master_dtype: Any = jnp.float32      # optimizer master copy
+    reduce_dtype: Any = jnp.float32      # gradient all-reduce dtype
+    activation_dtype: Any = jnp.bfloat16
+
+    def cast_params(self, tree):
+        return jax.tree.map(lambda x: _maybe_cast(x, self.param_dtype), tree)
+
+    def cast_compute(self, *xs):
+        out = tuple(_maybe_cast(x, self.compute_dtype) for x in xs)
+        return out[0] if len(out) == 1 else out
+
+    def cast_master(self, tree):
+        return jax.tree.map(lambda x: _maybe_cast(x, self.master_dtype), tree)
+
+
+def _maybe_cast(x, dtype):
+    if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+        return x.astype(dtype)
+    return x
+
+
+# The paper's operating points.
+FULL = Policy(param_dtype=jnp.float32, compute_dtype=jnp.float32,
+              activation_dtype=jnp.float32)
+MIXED = Policy()                                   # bf16 storage+compute, fp32 accum
+HALF_STORAGE = Policy(compute_dtype=jnp.float32)   # §4.2 "store half, upcast to float"
+
+
+def matmul(a: jax.Array, b: jax.Array, policy: Policy = MIXED, **kw):
+    """Precision-policy matmul: compute-dtype operands, accum-dtype result.
+
+    ``preferred_element_type`` is the TPU MXU's fp32 accumulator — the native
+    form of dMath's "upcast before computation".
+    """
+    a, b = policy.cast_compute(a, b)
+    return jnp.matmul(a, b, preferred_element_type=policy.accum_dtype, **kw)
+
+
+def einsum(subscripts: str, *operands, policy: Policy = MIXED, **kw):
+    ops = policy.cast_compute(*operands)
+    if not isinstance(ops, tuple):
+        ops = (ops,)
+    return jnp.einsum(subscripts, *ops,
+                      preferred_element_type=policy.accum_dtype, **kw)
+
+
+def lazy_promote(x, target_dtype):
+    """Identity marker for pipeline stages: promote only when actually needed."""
+    if x.dtype == target_dtype:
+        return x
+    return x.astype(target_dtype)

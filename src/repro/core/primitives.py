@@ -1,0 +1,106 @@
+"""Additional distributed primitives named by the paper.
+
+- :func:`add_row_col_sum_matrix` — the paper's §2.3 example subroutine:
+  ``M + alpha * rowsum(M) + beta * colsum(M)`` broadcast back onto the
+  matrix.  The distributed version reduces across shards; the paper
+  "sacrifices deterministic outcomes for speed" here — we expose both a
+  deterministic mode (fixed reduction order via tree-psum of fp32) and
+  the fast mode (single bf16 psum, reduction order left to the runtime),
+  and register the fast mode in ``core.rng.NONDETERMINISTIC_OPS``.
+
+- :func:`conv2d_halo` — distributed 2-D convolution with the batch dim
+  data-parallel and the HEIGHT dim spatially sharded over the model axis,
+  exchanging kernel-radius halos with ``collective-permute`` (the classic
+  stencil decomposition; dMath lists convolutions among its distributed
+  kernels).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .layout import Layout
+
+
+def add_row_col_sum_matrix(
+    m: jax.Array,                  # (R, C) row-sharded over `axis`
+    alpha: float = 1.0,
+    beta: float = 1.0,
+    *,
+    mesh: Mesh,
+    axis: str = "model",
+    deterministic: bool = True,
+) -> jax.Array:
+    """M[i,j] + alpha * rowsum_i + beta * colsum_j, M row-sharded.
+
+    rowsum is shard-local; colsum needs the cross-shard reduction whose
+    ORDER is the §2.3 determinism question.  ``deterministic=True`` does
+    the reduction in fp32 (order-insensitive to working precision);
+    ``False`` reduces in bf16 — faster on the wire, bit-variable across
+    topologies, exactly the trade the paper documents.
+    """
+
+    def body(lm):
+        rowsum = jnp.sum(lm.astype(jnp.float32), axis=1, keepdims=True)
+        local_col = jnp.sum(lm.astype(
+            jnp.float32 if deterministic else jnp.bfloat16), axis=0,
+            keepdims=True)
+        colsum = jax.lax.psum(local_col, axis).astype(jnp.float32)
+        out = lm.astype(jnp.float32) + alpha * rowsum + beta * colsum
+        return out.astype(m.dtype)
+
+    return jax.shard_map(
+        body, check_vma=False, mesh=mesh,
+        in_specs=(P(axis, None),), out_specs=P(axis, None),
+    )(m)
+
+
+def conv2d_halo(
+    x: jax.Array,                  # (B, H, W, Cin) H sharded over `axis`
+    w: jax.Array,                  # (kh, kw, Cin, Cout) replicated
+    *,
+    mesh: Mesh,
+    axis: str = "model",
+    batch_axis: Optional[str] = "data",
+) -> jax.Array:
+    """SAME-padded conv2d with the height dim spatially sharded.
+
+    Each shard exchanges its kh//2 boundary rows with both neighbours via
+    ``collective_permute`` (the halo), then runs a purely local conv on
+    the padded block — wire bytes are O(halo), not O(activations).
+    """
+    kh = w.shape[0]
+    r = kh // 2
+    n = mesh.shape[axis]
+
+    def body(lx, lw):
+        if r and n > 1:
+            idx = jax.lax.axis_index(axis)
+            up = jax.lax.ppermute(
+                lx[:, -r:], axis, [(i, (i + 1) % n) for i in range(n)])
+            down = jax.lax.ppermute(
+                lx[:, :r], axis, [(i, (i - 1) % n) for i in range(n)])
+            zeros_u = jnp.zeros_like(up)
+            zeros_d = jnp.zeros_like(down)
+            top = jnp.where((idx == 0), zeros_u, up)          # no wrap
+            bot = jnp.where((idx == n - 1), zeros_d, down)
+            ext = jnp.concatenate([top, lx, bot], axis=1)
+        else:
+            ext = jnp.pad(lx, ((0, 0), (r, r), (0, 0), (0, 0)))
+        kw_half = w.shape[1] // 2
+        out = jax.lax.conv_general_dilated(
+            ext.astype(jnp.float32), lw.astype(jnp.float32),
+            (1, 1), [(0, 0), (kw_half, kw_half)],   # H already halo-padded
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return out.astype(lx.dtype)
+
+    bspec = batch_axis if batch_axis in mesh.shape else None
+    return jax.shard_map(
+        body, check_vma=False, mesh=mesh,
+        in_specs=(P(bspec, axis, None, None), P(None, None, None, None)),
+        out_specs=P(bspec, axis, None, None),
+    )(x, w)

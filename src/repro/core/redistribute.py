@@ -1,0 +1,160 @@
+"""Data reorganization service (paper §3.3).
+
+dMath "allows an algorithm to reshape (including a change of concurrency and
+layout), over the same group of processes or a superset/subset, and/or change
+precision during reshape".  On a TPU mesh the primitive relayouts map onto
+collectives:
+
+  sharded  -> replicated : all-gather
+  replicated -> sharded  : local slice (free; dynamic-slice on each shard)
+  sharded(dim i) -> sharded(dim j) : all-to-all
+  sharded(axis a) -> sharded(axis b), same dim : collective-permute chain
+                                                 (GSPMD chooses, often a2a)
+
+Two implementations are provided:
+
+- :func:`relayout` — the production path: a sharding constraint pair inside
+  ``jit``; GSPMD emits the collective.  Used by the models and the GEMM
+  dispatcher.
+- :func:`relayout_explicit` — a ``shard_map`` path that names the collective
+  explicitly; used by tests/benchmarks to validate that the GSPMD path moves
+  the bytes we claim it does.
+
+Both accept ``dtype`` to change precision in flight (cast before the
+collective when narrowing, after when widening, so the wire sees the narrow
+form — the paper's reduced-precision transfer trick, §4.2).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from .layout import Layout, constrain
+
+
+def relayout(
+    x: jax.Array,
+    dst: Layout,
+    mesh: Optional[Mesh] = None,
+    dtype=None,
+    src: Optional[Layout] = None,
+) -> jax.Array:
+    """Move ``x`` to layout ``dst`` (GSPMD path), optionally changing dtype.
+
+    When narrowing (e.g. fp32 -> bf16) the cast happens *before* the
+    constraint so the collective moves the narrow bytes; when widening,
+    after.
+    """
+    if dtype is not None and jnp.dtype(dtype).itemsize < jnp.dtype(x.dtype).itemsize:
+        x = x.astype(dtype)
+        dtype = None
+    if src is not None:
+        x = constrain(x, src, mesh)
+    x = constrain(x, dst, mesh)
+    if dtype is not None:
+        x = x.astype(dtype)
+    return x
+
+
+def _axis_of(layout: Layout, dim: int):
+    return layout.dims[dim]
+
+
+def relayout_explicit(
+    x: jax.Array,
+    src: Layout,
+    dst: Layout,
+    mesh: Mesh,
+    dtype=None,
+) -> jax.Array:
+    """Explicit shard_map relayout naming each collective.
+
+    Covers the primitive moves used by the GEMM algorithms; composite moves
+    fall back to gather-then-slice.  Operates on *global* arrays (the
+    shard_map body sees local blocks).
+    """
+    if dtype is not None and jnp.dtype(dtype).itemsize < jnp.dtype(x.dtype).itemsize:
+        x = x.astype(dtype)
+        dtype = None
+
+    if src == dst:
+        out = x
+    else:
+        out = _relayout_shardmap(x, src, dst, mesh)
+    if dtype is not None:
+        out = out.astype(dtype)
+    return out
+
+
+def _relayout_shardmap(x, src: Layout, dst: Layout, mesh: Mesh):
+    src_dims, dst_dims = src.sharded_dims(), dst.sharded_dims()
+
+    # sharded -> replicated: all_gather on every axis used by src.
+    if dst.is_replicated():
+        def body(lx):
+            for dim in reversed(src_dims):
+                ax = _axis_of(src, dim)
+                lx = jax.lax.all_gather(lx, ax, axis=dim, tiled=True)
+            return lx
+        return jax.shard_map(
+            body, check_vma=False, mesh=mesh, in_specs=(src.spec,), out_specs=dst.spec
+        )(x)
+
+    # replicated -> sharded: free; shard_map with psum-less slicing is just
+    # a constraint in disguise — let GSPMD slice.
+    if src.is_replicated():
+        return constrain(x, dst, mesh)
+
+    # sharded dim i -> sharded dim j over the SAME single axis: all_to_all.
+    if (
+        len(src_dims) == 1 and len(dst_dims) == 1
+        and src_dims != dst_dims
+        and _axis_of(src, src_dims[0]) == _axis_of(dst, dst_dims[0])
+        and isinstance(_axis_of(src, src_dims[0]), str)
+    ):
+        i, j = src_dims[0], dst_dims[0]
+        ax = _axis_of(src, i)
+
+        def body(lx):
+            return jax.lax.all_to_all(
+                lx, ax, split_axis=j, concat_axis=i, tiled=True
+            )
+
+        return jax.shard_map(
+            body, check_vma=False, mesh=mesh, in_specs=(src.spec,), out_specs=dst.spec
+        )(x)
+
+    # Fallback: gather fully then re-slice (correct for any pair; the cost
+    # model in benchmarks/redistribute.py quantifies when this is wasteful).
+    gathered = _relayout_shardmap(x, src, Layout.replicated(src.ndim), mesh)
+    return constrain(gathered, dst, mesh)
+
+
+def replicate(x: jax.Array, mesh: Optional[Mesh] = None) -> jax.Array:
+    return relayout(x, Layout.replicated(x.ndim), mesh)
+
+
+def collective_bytes_estimate(
+    shape, dtype, src: Layout, dst: Layout, mesh: Mesh
+) -> int:
+    """Analytic wire-bytes-per-device for a relayout (planner/roofline aid).
+
+    all-gather: (n-1)/n of the global array arrives per device;
+    all-to-all:  (n-1)/n of the local block leaves per device.
+    """
+    import math
+    total = math.prod(shape) * jnp.dtype(dtype).itemsize
+    if src == dst:
+        return 0
+    if dst.is_replicated():
+        n = src.num_shards(mesh)
+        return total * (n - 1) // n
+    if src.is_replicated():
+        return 0
+    n = src.num_shards(mesh)
+    local = total // n
+    return local * (n - 1) // n

@@ -1,0 +1,86 @@
+"""Parameter replication & ZeRO-sharded state (paper §2.1).
+
+dMath: "After each worker computes the weight updates for its chunk of the
+model, asynchronous replications are initiated for learnable parameters that
+will be needed by all workers for the forward pass.  This effectively
+overlaps parameter updates with the forward pass computation."
+
+That is, to the letter, ZeRO-style optimizer sharding with an overlapped
+parameter all-gather.  On TPU/JAX the pieces map to:
+
+- *chunk of the model*: optimizer state (fp32 master + moments) sharded over
+  the ``data`` axis (:func:`zero_layout`),
+- *asynchronous replication*: the per-layer all-gather GSPMD emits where the
+  bf16 parameter is consumed; placing the consume inside ``lax.scan`` lets
+  XLA's latency-hiding scheduler issue the gather for layer *i+1* during
+  layer *i*'s compute (:func:`gathered` marks the boundary),
+- *synchronous replication*: an eager relayout to Replicated
+  (:func:`replicate_now`) used at checkpoint/export boundaries.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from .layout import Layout, constrain
+from .redistribute import relayout
+
+
+def zero_layout(param_layout: Layout, shape, mesh: Mesh,
+                axes: tuple = ("data", "model", "pod")) -> Layout:
+    """Layout for optimizer state: the param layout plus every unused mesh
+    axis placed greedily on unsharded divisible dimensions (ZeRO-1, pushed
+    to the full device count — SP-replicated attention weights get their
+    master/moments sharded over *both* data and model).
+
+    If no dimension qualifies the state stays at the param layout (small
+    tensors — norms, biases — are not worth scattering).
+    """
+    lay = param_layout
+    local = list(lay.local_shape(shape, mesh)) if lay.divisible(shape, mesh) \
+        else list(shape)
+    for axis in axes:
+        if axis not in mesh.shape or axis in lay.mesh_axes_used():
+            continue
+        n = mesh.shape[axis]
+        for dim, d in enumerate(lay.dims):
+            if d is None and local[dim] % n == 0 and local[dim] >= n:
+                lay = lay.with_dim(dim, axis)
+                local[dim] //= n
+                break
+    return lay
+
+
+def zero_layout_tree(param_layouts, shapes, mesh: Mesh):
+    return jax.tree.map(
+        lambda l, s: zero_layout(l, s.shape if hasattr(s, "shape") else s,
+                                 mesh),
+        param_layouts, shapes,
+        is_leaf=lambda x: isinstance(x, Layout),
+    )
+
+
+def gathered(param: jax.Array, use_layout: Layout,
+             mesh: Optional[Mesh] = None) -> jax.Array:
+    """Mark the storage->use boundary of a sharded parameter.
+
+    The constraint makes GSPMD materialize the replicated (or TP-only) form
+    exactly where it is consumed; inside a scanned layer stack the gather of
+    step i+1 overlaps step i (the paper's async replication).
+    """
+    return constrain(param, use_layout, mesh)
+
+
+def replicate_now(param: jax.Array, mesh: Optional[Mesh] = None) -> jax.Array:
+    """Synchronous replication (paper §2.1's blocking variant)."""
+    return relayout(param, Layout.replicated(param.ndim), mesh)
+
+
+def use_layout_of(storage: Layout, fsdp_axis: str = "data") -> Layout:
+    """The compute-time layout of an FSDP-stored parameter: drop the storage
+    axis, keep the TP axes (gather over ``data``, stay sharded over
+    ``model``)."""
+    return storage.drop_axis(fsdp_axis)

@@ -1,0 +1,53 @@
+"""Reproducibility: master-distributed seeds (paper §2.3).
+
+dMath distributes seed values from the master node to workers so runs are
+reproducible, while documenting the few subroutines where reduction order is
+non-deterministic.  In JAX the analogue is a single root ``PRNGKey`` that is
+``fold_in``-derived along a *named path*, so any worker (mesh coordinate,
+layer index, microbatch id) derives the same stream without communication.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Iterable, Union
+
+import jax
+
+PathPart = Union[str, int]
+
+
+def root_key(seed: int) -> jax.Array:
+    return jax.random.PRNGKey(seed)
+
+
+def _fold_str(key: jax.Array, s: str) -> jax.Array:
+    h = int.from_bytes(hashlib.blake2s(s.encode(), digest_size=4).digest(), "little")
+    return jax.random.fold_in(key, h)
+
+
+def derive(key: jax.Array, *path: PathPart) -> jax.Array:
+    """Derive a deterministic subkey from a hierarchical path.
+
+    ``derive(k, "layer", 3, "dropout")`` is stable across processes, mesh
+    shapes and restarts — the master-seed-distribution of §2.3 without any
+    broadcast (the path *is* the metadata).
+    """
+    for p in path:
+        key = _fold_str(key, p) if isinstance(p, str) else jax.random.fold_in(key, p)
+    return key
+
+
+def per_step(key: jax.Array, step: Union[int, jax.Array]) -> jax.Array:
+    return jax.random.fold_in(key, step)
+
+
+# Subroutines whose distributed reduction order is allowed to be
+# non-deterministic for speed (paper §2.3 names AddRowColSumMatrix).  Each
+# entry maps name -> why.  Everything NOT listed here must be bitwise
+# reproducible given the same mesh.
+NONDETERMINISTIC_OPS = {
+    "grad_allreduce_compressed": "error-feedback quantization reduces in ring order",
+    "add_row_col_sum_matrix[fast]": "bf16 cross-shard colsum, runtime "
+                                    "reduction order (the paper's own §2.3 example)",
+}

@@ -1,0 +1,3 @@
+from .pipeline import Pipeline, Stage, SyntheticLM
+
+__all__ = ["Pipeline", "Stage", "SyntheticLM"]

@@ -1,0 +1,144 @@
+"""Flash attention Pallas kernel (prefill/train hot-spot).
+
+Online-softmax tiled attention with GQA, causal masking, sliding-window
+(gemma3 local layers) and logit soft-capping — the attention variants the
+assigned architectures need, in one kernel.
+
+Grid: (B * Hq, Sq/bq, T/bkv), kv innermost (sequential) carrying the
+running max/denominator/accumulator in VMEM scratch.  The GQA mapping is
+done in the BlockSpec index maps (q head h reads kv head h // group), so no
+materialized `repeat` of K/V ever touches HBM — on TPU this is the
+difference between streaming Hkv*T*D and Hq*T*D bytes.
+
+TPU adaptation notes (vs the CUDA flash-attention the paper era used):
+- block shapes are (bq, head_dim) with head_dim padded to lane width 128;
+- masks are computed from `iota` on the 8x128 VPU, not warp shuffles;
+- the kv loop is grid-sequential ("arbitrary"), not a warp-level pipeline:
+  Mosaic double-buffers the HBM->VMEM streams automatically.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, window: Optional[int],
+                 softcap: Optional[float], n_kv: int, bq: int, bkv: int,
+                 q_offset: int):
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                  # (bkv, D)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (bq, bkv)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = (pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bkv), 0) + q_offset)
+    kpos = kv_idx * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = jnp.ones((bq, bkv), dtype=jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                             # (bq, bkv)
+    alpha = jnp.exp(m_prev - m_new)                    # (bq, 1)
+
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _flush():
+        # rows with no visible kv (fully masked) produce l == 0; emit zeros.
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "bq", "bkv",
+                     "q_offset", "interpret"),
+)
+def attention(
+    q: jax.Array,                 # (B, Hq, Sq, D)
+    k: jax.Array,                 # (B, Hkv, T, D)
+    v: jax.Array,                 # (B, Hkv, T, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    bq: int = 256,
+    bkv: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, T, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    bq = min(bq, Sq)
+    bkv = min(bkv, T)
+    assert Sq % bq == 0 and T % bkv == 0, (Sq, T, bq, bkv)
+    n_kv = T // bkv
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, n_kv=n_kv, bq=bq, bkv=bkv, q_offset=q_offset)
+
+    grid = (B * Hq, Sq // bq, n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bkv, D),
+                         lambda bh, i, j, g=group, h=Hq, hk=Hkv:
+                         ((bh // h) * hk + (bh % h) // g, j, 0)),
+            pl.BlockSpec((1, bkv, D),
+                         lambda bh, i, j, g=group, h=Hq, hk=Hkv:
+                         ((bh // h) * hk + (bh % h) // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max
+            pltpu.VMEM((bq, 1), jnp.float32),     # running denom
+            pltpu.VMEM((bq, D), jnp.float32),     # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="dmath_flash_attention",
+    )(
+        q.reshape(B * Hq, Sq, D),
+        k.reshape(B * Hkv, T, D),
+        v.reshape(B * Hkv, T, D),
+    ).reshape(B, Hq, Sq, D)

@@ -1,0 +1,85 @@
+"""Blocked mixed-precision GEMM Pallas kernel — dMath's core kernel on TPU.
+
+The paper's GEMM stores operands in half precision and accumulates in float
+(§4.2).  On TPU that maps to bf16 operands streamed HBM->VMEM in
+(bm, bk)/(bk, bn) blocks, fp32 accumulation in a VMEM scratch tile feeding
+the 128x128 MXU, and a single downcast on the final k-step.
+
+Grid: (M/bm, N/bn, K/bk) with the K dimension innermost ("arbitrary"
+semantics — sequential) so the accumulator tile lives across k-steps.
+Block sizes default to MXU-aligned 256/512 multiples of 128; the autotuner
+(core.autotune) sweeps them on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"),
+)
+def matmul(
+    a: jax.Array,                 # (M, K) bf16/fp32
+    b: jax.Array,                 # (K, N)
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    out_dtype: Optional[jnp.dtype] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C[M,N] = A @ B, fp32 accumulation, blocked for VMEM.
+
+    VMEM working set = bm*bk + bk*bn (operands, bf16) + bm*bn*4 (fp32 acc);
+    the defaults use 256*512*2*2 + 256*256*4 = 0.75 MiB of ~16 MiB/core.
+    Shapes must tile exactly (the ops.py wrapper pads otherwise).
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        f"({M},{N},{K}) not tiled by ({bm},{bn},{bk})")
+    out_dtype = out_dtype or a.dtype
+    n_k = K // bk
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="dmath_gemm",
+    )(a, b)

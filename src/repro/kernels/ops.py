@@ -1,0 +1,65 @@
+"""Dispatch layer: Pallas kernel on TPU, interpret-mode or jnp oracle on CPU.
+
+Model code calls these wrappers; the backend decision (Mosaic kernel vs
+interpret-mode kernel vs pure-jnp reference) is made once here.  This is
+the same role dMath's kernel-selection layer plays (§4.1: the library picks
+the algorithm; the asterisked results show the fallback firing).
+
+Env/config knobs:
+  REPRO_KERNELS = "pallas" | "interpret" | "ref"   (default: pallas on TPU,
+                                                    ref elsewhere)
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import gemm as _gemm
+from . import ref as _ref
+from . import ssd_scan as _ssd
+
+
+def backend() -> str:
+    mode = os.environ.get("REPRO_KERNELS")
+    if mode:
+        return mode
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def matmul(a, b, out_dtype=None, *, bm=256, bn=256, bk=512):
+    mode = backend()
+    if mode == "ref":
+        return _ref.matmul(a, b, out_dtype)
+    return _gemm.matmul(a, b, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
+                        interpret=(mode == "interpret"))
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None,
+              scale=None, q_offset=0, bq=256, bkv=256):
+    mode = backend()
+    if mode == "ref":
+        return _ref.attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale, q_offset=q_offset)
+    return _fa.attention(q, k, v, causal=causal, window=window,
+                         softcap=softcap, scale=scale, q_offset=q_offset,
+                         bq=bq, bkv=bkv, interpret=(mode == "interpret"))
+
+
+def ssd(x, dt, A, Bm, C, *, chunk=256, init_state=None
+        ) -> Tuple[jax.Array, jax.Array]:
+    mode = backend()
+    if mode == "ref" or init_state is not None:
+        # the kernel path has no initial-state input (training starts at 0);
+        # chunked serving with carry-in uses the oracle semantics.
+        return _ref.ssd(x, dt, A, Bm, C, init_state=init_state)
+    return _ssd.ssd(x, dt, A, Bm, C, chunk=chunk,
+                    interpret=(mode == "interpret"))
+
+
+ssd_step = _ref.ssd_step   # single-token decode: pure jnp everywhere

@@ -1,0 +1,136 @@
+"""Mamba2 SSD (state-space duality) chunked-scan Pallas kernel.
+
+The SSD insight: within a chunk of Q tokens the recurrence
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T ,   y_t = C_t^T h_t
+
+is a *masked attention-like matmul* (the "duality"), and only the O(S/Q)
+chunk-boundary states need the sequential scan.  That maps beautifully onto
+the TPU: the intra-chunk part is three MXU matmuls per chunk, and the
+sequential part is the innermost grid dimension carrying a (P, N) fp32
+state tile in VMEM scratch — no HBM round-trip for the state, which is the
+TPU analogue of the paper's "persistent operands in device memory".
+
+Grid: (B, H, S/Q) with the chunk dim innermost ("arbitrary" = sequential).
+Per chunk, with a = cumsum(dt*A):
+
+    L        = tril(exp(a_i - a_j))                  (Q, Q) decay mask
+    y_diag   = ((C B^T) * L) @ (dt * x)              intra-chunk
+    y_off    = (C * exp(a)) @ h_in                   inter-chunk
+    h_out    = exp(a_Q) h_in + (B * exp(a_Q - a))^T @ (dt * x)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
+                h_ref, *, n_chunks: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, 1)
+    A = a_ref[0, 0].astype(jnp.float32)       # per-head decay scalar
+    Bm = b_ref[0].astype(jnp.float32)         # (Q, N)
+    C = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    dtA = dt[:, 0] * A                        # (Q,)
+    a_cum = jnp.cumsum(dtA)                   # inclusive cumsum
+    a_total = a_cum[-1]
+
+    # decay mask L[i, j] = exp(a_i - a_j) for j <= i (pairwise, stable:
+    # the difference form never exponentiates a positive number since A<0).
+    diff = a_cum[:, None] - a_cum[None, :]
+    Q = x.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(jj <= ii, jnp.exp(diff), 0.0)
+
+    xdt = x * dt                              # (Q, P)
+    scores = jnp.dot(C, Bm.T, preferred_element_type=jnp.float32) * L
+    y = jnp.dot(scores, xdt, preferred_element_type=jnp.float32)
+
+    h = h_ref[...]                            # (N, P) carried state
+    y += jnp.dot(C * jnp.exp(a_cum)[:, None], h,
+                 preferred_element_type=jnp.float32)
+
+    b_decay = Bm * jnp.exp(a_total - a_cum)[:, None]          # (Q, N)
+    h_ref[...] = jnp.exp(a_total) * h + jnp.dot(
+        b_decay.T, xdt, preferred_element_type=jnp.float32)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _flush():
+        state_ref[0] = h_ref[...].astype(state_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(
+    x: jax.Array,                 # (B, S, H, P)
+    dt: jax.Array,                # (B, S, H)
+    A: jax.Array,                 # (H,)
+    Bm: jax.Array,                # (B, S, G, N)
+    C: jax.Array,                 # (B, S, G, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    B, S, H, P = x.shape
+    _, _, G, N = Bm.shape
+    rep = H // G
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    # head-major layouts for the kernel
+    xh = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dth = dt.transpose(0, 2, 1).reshape(B * H, S, 1)
+    bh = Bm.transpose(0, 2, 1, 3).reshape(B * G, S, N)
+    ch = C.transpose(0, 2, 1, 3).reshape(B * G, S, N)
+
+    def g_index(bh_i, _c, g=rep, h=H, gg=G):
+        return ((bh_i // h) * gg + (bh_i % h) // g, _c, 0)
+
+    y, state = pl.pallas_call(
+        functools.partial(_ssd_kernel, n_chunks=n_chunks),
+        grid=(B * H, 1, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda i, q, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, q, c: (i, c, 0)),
+            pl.BlockSpec((1, 1), lambda i, q, c, h=H: (i % h, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, q, c: g_index(i, c)),
+            pl.BlockSpec((1, chunk, N), lambda i, q, c: g_index(i, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), lambda i, q, c: (i, c, 0)),
+            pl.BlockSpec((1, N, P), lambda i, q, c: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B * H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="dmath_ssd_scan",
+    )(xh, dth, A.reshape(H, 1), bh, ch)
+
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    state = state.reshape(B, H, N, P).transpose(0, 1, 3, 2)   # -> (B,H,P,N)
+    return y, state

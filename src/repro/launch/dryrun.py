@@ -1,0 +1,306 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# Only the dry-run sees 512 placeholder devices; tests/benches see 1.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (SHAPES, default_microbatches, get_config,  # noqa: E402
+                           input_specs, cells)
+from repro.core.planner import plan_for  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import Model  # noqa: E402
+from repro.models.params import tree_sds, tree_shardings  # noqa: E402
+from repro.train import step as train_step_mod  # noqa: E402
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell, lower + compile the step
+function against ShapeDtypeStruct stand-ins on the production mesh
+(16x16 = 256 chips; --multi-pod: 2x16x16 = 512) and record
+
+  - memory_analysis()  : per-device bytes (proves it fits),
+  - cost_analysis()    : per-device HLO FLOPs/bytes (feeds the roofline),
+  - the collective schedule parsed from the partitioned HLO text
+    (op type, dtype, shape, group size -> wire bytes per device).
+
+Failures here (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the system. Results land in experiments/dryrun/*.json.
+"""
+
+COLLECTIVE_RE = re.compile(
+    r"(?P<dtype>[a-z0-9]+)\[(?P<shape>[0-9,]*)\][^ ]* "
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+ITEMSIZE = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+            "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1,
+            "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def parse_collectives(hlo: str):
+    """Per-op: (op, dtype, numel, group_size, wire_bytes_per_device)."""
+    out = []
+    for line in hlo.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        dt = m.group("dtype")
+        shape = [int(x) for x in m.group("shape").split(",") if x]
+        numel = 1
+        for s in shape:
+            numel *= s
+        size = numel * ITEMSIZE.get(dt, 4)
+        g = GROUPS_IOTA_RE.search(line)
+        if g:
+            n = int(g.group(2))
+        else:
+            g2 = GROUPS_LIST_RE.search(line)
+            n = len(g2.group(1).split(",")) if g2 else 1
+        n = max(n, 1)
+        # wire bytes per device (ring algorithms); result-shape based
+        if op == "all-gather":
+            wire = size * (n - 1) // max(n, 1)
+        elif op == "all-reduce":
+            wire = 2 * size * (n - 1) // max(n, 1)
+        elif op == "reduce-scatter":
+            wire = size * (n - 1)          # result is already 1/n
+        elif op == "all-to-all":
+            wire = size * (n - 1) // max(n, 1)
+        else:                               # collective-permute
+            wire = size
+        out.append({"op": op, "dtype": dt, "shape": shape,
+                    "group": n, "bytes": size, "wire_bytes": wire})
+    return out
+
+
+# Per-arch baseline overrides (memory-driven; every deviation from the
+# defaults is recorded in EXPERIMENTS.md Dry-run notes).
+OVERRIDES: Dict[str, Dict[str, Any]] = {
+    # dbrx-132b: optimizer state floor is 6.2 GiB/dev at 256 chips; bf16
+    # moments (-2.1 GiB) + sqrt-L remat (-1.5 GiB) bring train_4k under
+    # HBM.  132B on 256 chips sits on the memory-vs-wire frontier: 16
+    # microbatches are required to fit even though each one re-gathers
+    # the FSDP shards (the roofline collective term records that price;
+    # the 2-pod mesh halves it).  The low per-tensor FSDP bound keeps
+    # every multi-GiB stack sharded.
+    "dbrx-132b": {"model_kwargs": {"remat": "group:8"},
+                  "adamw_kwargs": {"moment_dtype": "bfloat16"},
+                  "plan_kwargs": {"fsdp_tensor_bytes": 0.4 * 2**30},
+                  "train_microbatches": 16},
+    # internvl2-26b: 3.6 GiB q/o stacks replicated blow HBM; FSDP them and
+    # trade microbatches against sqrt-L remat.
+    "internvl2-26b": {"model_kwargs": {"remat": "group:8"},
+                      "plan_kwargs": {"fsdp_tensor_bytes": 2 * 2**30},
+                      "train_microbatches": 8},
+    # qwen3-14b: FSDP the 2.1 GiB q/o stacks — replicated storage fits,
+    # but the BACKWARD then stacks full fp32 weight grads (measured
+    # +8 GiB); sharded storage reduce-scatters them per group instead.
+    "qwen3-14b": {"model_kwargs": {"remat": "group:8"},
+                  "plan_kwargs": {"fsdp_tensor_bytes": 1.5 * 2**30},
+                  "train_microbatches": 8},
+    # Small archs fit HBM at 1-2 microbatches; fewer microbatches mean
+    # fewer per-step weight re-gathers and gradient reductions (wire / 2-4
+    # at equal math — §Perf iteration 7).
+    "mamba2-780m": {"train_microbatches": 1},
+    "musicgen-medium": {"train_microbatches": 2},
+    "gemma-2b": {"train_microbatches": 2,
+                 # FSDP the replicated FFN bank's storage (grad stacks
+                 # otherwise materialize fp32 full-size in backward)
+                 "plan_kwargs": {"fsdp_tensor_bytes": 1 * 2**30}},
+    "zamba2-1.2b": {"train_microbatches": 1},
+    "deepseek-moe-16b": {"train_microbatches": 2},
+}
+
+
+def _adamw_from(over: Dict[str, Any]):
+    import repro.train.optimizer as opt_mod
+    kw = dict(over.get("adamw_kwargs", {}))
+    if "moment_dtype" in kw:
+        kw["moment_dtype"] = jnp.dtype(kw["moment_dtype"])
+    return opt_mod.AdamWConfig(**kw) if kw else None
+
+
+def build_lowered(arch: str, shape_name: str, mesh, *,
+                  microbatches: Optional[int] = None, model_kwargs=None,
+                  plan_kwargs=None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    over = OVERRIDES.get(arch, {})
+    plan_kwargs = {**over.get("plan_kwargs", {}), **(plan_kwargs or {})}
+    model_kwargs = {**over.get("model_kwargs", {}), **(model_kwargs or {})}
+    adamw = _adamw_from(over)
+    plan = plan_for(cfg, mesh, **plan_kwargs)
+    model = Model(cfg, mesh, plan, **model_kwargs)
+    b_sds, b_sh = input_specs(cfg, shape, mesh, plan)
+
+    if shape.kind == "train":
+        nmb = (microbatches if microbatches is not None
+               else over.get("train_microbatches")
+               or default_microbatches(cfg, shape, mesh, plan))
+        # each microbatch must still span every batch shard
+        import math as _m
+        nb = _m.prod(mesh.shape[a] for a in plan.batch_axes)
+        nmb = max(1, min(nmb, shape.global_batch // nb))
+        ts = train_step_mod.build_train_step(model, mesh, adamw,
+                                             num_microbatches=nmb)
+        st_sds = train_step_mod.state_sds(model, mesh, adamw)
+        st_sh = train_step_mod.state_shardings(model, mesh, adamw)
+        f = jax.jit(ts, in_shardings=(st_sh, b_sh),
+                    out_shardings=(st_sh, None), donate_argnums=(0,))
+        lowered = f.lower(st_sds, b_sds)
+        meta = {"step": "train_step", "microbatches": nmb}
+
+    elif shape.kind == "prefill":
+        p_sds = model.param_sds()
+        p_sh = model.param_shardings()
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["tokens"],
+                                 batch.get("vision_embeds"))
+
+        lowered = jax.jit(prefill_step, in_shardings=(p_sh, b_sh)) \
+            .lower(p_sds, b_sds)
+        meta = {"step": "prefill_step"}
+
+    else:  # decode / long_decode: serve_step with a seq_len KV cache
+        p_sds = model.param_sds()
+        p_sh = model.param_shardings()
+        c_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+        c_sds = tree_sds(c_specs)
+        c_sh = tree_shardings(c_specs, mesh)
+
+        def serve_step(params, cache, batch):
+            return model.decode_step(params, cache, batch["tokens"],
+                                     batch["pos"])
+
+        lowered = jax.jit(serve_step, in_shardings=(p_sh, c_sh, b_sh),
+                          donate_argnums=(1,)) \
+            .lower(p_sds, c_sds, b_sds)
+        meta = {"step": "serve_step"}
+
+    meta.update(arch=arch, shape=shape_name, plan={
+        "attn_mode": plan.attn_mode, "fsdp": plan.fsdp,
+        "seq_parallel_residual": plan.seq_parallel_residual,
+        "batch_axes": list(plan.batch_axes)})
+    return lowered, meta, model
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             microbatches: Optional[int] = None, model_kwargs=None,
+             plan_kwargs=None, hlo_out: Optional[str] = None
+             ) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    with jax.set_mesh(mesh):
+        t0 = time.time()
+        lowered, meta, _ = build_lowered(
+            arch, shape_name, mesh, microbatches=microbatches,
+            model_kwargs=model_kwargs, plan_kwargs=plan_kwargs)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    if hlo_out:
+        import gzip
+        with gzip.open(hlo_out, "wt") as f:
+            f.write(hlo)
+
+    by_op: Dict[str, Dict[str, float]] = {}
+    for c in colls:
+        d = by_op.setdefault(c["op"], {"count": 0, "wire_bytes": 0})
+        d["count"] += 1
+        d["wire_bytes"] += c["wire_bytes"]
+
+    result = {
+        **meta,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           - mem.alias_size_in_bytes),
+        },
+        "cost": {"flops": ca.get("flops", 0.0),
+                 "bytes_accessed": ca.get("bytes accessed", 0.0)},
+        "collectives": by_op,
+        "collective_wire_bytes": sum(c["wire_bytes"] for c in colls),
+        "n_collectives": len(colls),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--hlo-out", type=str, default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = []
+    if args.all:
+        todo = [(a, s) for a, s in cells()]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        todo = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in todo:
+        for mp in meshes:
+            tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+            try:
+                hlo_out = args.hlo_out or os.path.join(
+                    args.out, tag + ".hlo.gz")
+                res = run_cell(arch, shape, multi_pod=mp,
+                               microbatches=args.microbatches,
+                               hlo_out=hlo_out)
+                path = os.path.join(args.out, tag + ".json")
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                gib = res["memory"]["peak_bytes"] / 2**30
+                print(f"OK   {tag}: peak {gib:.2f} GiB/dev, "
+                      f"flops {res['cost']['flops']:.3e}, "
+                      f"colls {res['n_collectives']} "
+                      f"({res['collective_wire_bytes'] / 2**30:.2f} GiB wire), "
+                      f"compile {res['compile_s']}s")
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((tag, str(e)[:200]))
+                print(f"FAIL {tag}: {str(e)[:200]}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: "
+                         + "; ".join(t for t, _ in failures))
+    print("ALL DRY-RUN CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run forces 512 host devices *before*
+first jax init; everything else sees the real topology).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/benchmarks (same Auto axis types)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist, as (data=n, model=1) — the layouts always
+    name both axes (smoke tests, examples)."""
+    n = len(jax.devices())
+    return make_mesh((n, 1), ("data", "model"))

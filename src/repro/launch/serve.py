@@ -1,0 +1,70 @@
+"""Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Spins up the batched engine on a reduced config, feeds synthetic prompts,
+reports tokens/sec — the inference counterpart of launch/train.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.planner import plan_for
+from repro.launch import mesh as mesh_mod
+from repro.launch.train import scale_config
+from repro.models import Model
+from repro.serve import Engine, Request
+
+
+def run(arch: str, *, n_requests: int = 8, batch_slots: int = 4,
+        max_seq: int = 128, prompt_len: int = 16, new_tokens: int = 16,
+        scale_down: int = 64, seed: int = 0, mesh=None):
+    cfg = scale_config(get_config(arch), scale_down)
+    mesh = mesh or mesh_mod.make_host_mesh()
+    plan = plan_for(cfg, mesh)
+    model = Model(cfg, mesh, plan, q_chunk=64, kv_chunk=128, ssd_chunk=32)
+
+    with jax.set_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(seed))
+        params = jax.device_put(params, model.param_shardings())
+        eng = Engine(model, params, batch_slots, max_seq)
+        rng = np.random.default_rng(seed)
+        for rid in range(n_requests):
+            eng.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab_size, prompt_len,
+                                    dtype=np.int32),
+                max_new_tokens=new_tokens))
+        t0 = time.perf_counter()
+        total = 0
+        ticks = 0
+        while (eng.queue or any(r is not None for r in eng.active)) \
+                and ticks < 10_000:
+            total += eng.step()
+            ticks += 1
+        dt = time.perf_counter() - t0
+    print(f"{arch}: {n_requests} requests, {total} tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s, {ticks} ticks)")
+    return total, dt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch-slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--scale-down", type=int, default=64)
+    args = ap.parse_args()
+    run(args.arch, n_requests=args.requests, batch_slots=args.batch_slots,
+        max_seq=args.max_seq, new_tokens=args.new_tokens,
+        scale_down=args.scale_down)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+End-to-end: config -> mesh -> plan -> model -> data pipeline -> jitted
+train step -> checkpoint/restart loop with watchdog.  On this CPU container
+use reduced dims (--scale-down) and a small mesh; on a fleet the same
+driver runs the production mesh (the dry-run proves those shardings).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import SHAPES, get_config, input_specs
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.planner import plan_for
+from repro.data import Pipeline, Stage, SyntheticLM
+from repro.launch import mesh as mesh_mod
+from repro.models import Model
+from repro.train import (AdamWConfig, StepTimeWatchdog, build_train_step,
+                         init_state, state_shardings, warmup_cosine)
+
+
+def scale_config(cfg: ModelConfig, down: int) -> ModelConfig:
+    """Reduced-config variant of an arch (same family/topology)."""
+    if down <= 1:
+        return cfg
+    r = lambda x, m=8: max(m, x // down)
+    kw = dict(
+        n_layers=max(2, cfg.n_layers // down),
+        d_model=r(cfg.d_model, 64),
+        d_ff=r(cfg.d_ff, 64) if cfg.d_ff else 0,
+        vocab_size=max(256, cfg.vocab_size // down),
+    )
+    if cfg.n_heads:
+        heads = max(2, cfg.n_heads // down)
+        kv = max(1, min(cfg.n_kv_heads, heads))
+        kw.update(n_heads=heads, n_kv_heads=kv,
+                  head_dim=max(8, kw["d_model"] // heads))
+    if cfg.n_experts:
+        kw.update(n_experts=max(4, cfg.n_experts // down),
+                  top_k=min(cfg.top_k, 2),
+                  d_ff_expert=r(cfg.d_ff_expert, 32))
+    if cfg.ssm_state:
+        kw.update(ssm_state=max(16, cfg.ssm_state // down),
+                  ssm_head_dim=16)
+    if cfg.attn_every:
+        kw.update(attn_every=2)
+    if cfg.n_vision_tokens:
+        kw.update(n_vision_tokens=16)
+    if cfg.window:
+        kw.update(window=16)
+    return dataclasses.replace(cfg, **kw)
+
+
+def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
+        scale_down: int = 64, lr: float = 3e-3, microbatches: int = 1,
+        ckpt_dir: Optional[str] = None, ckpt_every: int = 25,
+        resume: bool = False, mesh=None, log_every: int = 10,
+        seed: int = 0):
+    cfg = scale_config(get_config(arch), scale_down)
+    mesh = mesh or mesh_mod.make_host_mesh()
+    plan = plan_for(cfg, mesh)
+    model = Model(cfg, mesh, plan, q_chunk=64, kv_chunk=128, ssd_chunk=32)
+
+    adamw = AdamWConfig(lr=warmup_cosine(lr, steps // 10 + 1, steps))
+    train_step = build_train_step(model, mesh, adamw,
+                                  num_microbatches=microbatches)
+    st_sh = {"params": model.param_shardings(),
+             "opt": state_shardings(model, mesh)["opt"]}
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start_step = 0
+    with jax.set_mesh(mesh):
+        if resume and mgr is not None and mgr.latest_step() is not None:
+            state = mgr.restore(shardings=st_sh)
+            start_step = int(jax.device_get(state["opt"]["step"]))
+            print(f"resumed from step {start_step}")
+        else:
+            state = dataclasses.asdict(init_state(model, mesh,
+                                                  jax.random.PRNGKey(seed)))
+
+        source = SyntheticLM(cfg.vocab_size, batch, seq, seed=seed,
+                             structured=True)
+        if cfg.family == "vlm":
+            def add_vision(item):
+                import numpy as np
+                item = dict(item)
+                nv = cfg.n_vision_tokens
+                item["tokens"] = item["tokens"][:, :-nv]
+                item["labels"][:, :nv] = -1
+                item["vision_embeds"] = np.zeros(
+                    (batch, nv, cfg.d_model), np.float32)
+                return item
+            stages = [Stage("vision_stub", add_vision, "host")]
+        else:
+            stages = []
+        pipe = Pipeline(source, stages, n_threads=2).start()
+
+        jstep = jax.jit(train_step, donate_argnums=(0,))
+        dog = StepTimeWatchdog()
+        losses = []
+        try:
+            for i in range(start_step, steps):
+                batch_np = next(pipe)
+                t0 = time.perf_counter()
+                state, metrics = jstep(state, jax.tree.map(jnp.asarray,
+                                                           batch_np))
+                loss = float(jax.device_get(metrics["loss"]))
+                dt = time.perf_counter() - t0
+                losses.append(loss)
+                msg = dog.observe(i, dt)
+                if msg:
+                    print("WATCHDOG:", msg)
+                if (i + 1) % log_every == 0 or i == start_step:
+                    print(f"step {i + 1:5d} loss {loss:.4f} "
+                          f"({dt * 1e3:.0f} ms)")
+                if mgr is not None and (i + 1) % ckpt_every == 0:
+                    mgr.save(i + 1, state)
+            if mgr is not None:
+                mgr.save(steps, state, blocking=True)
+        finally:
+            pipe.stop()
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--scale-down", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    losses = run(args.arch, steps=args.steps, batch=args.batch,
+                 seq=args.seq, scale_down=args.scale_down, lr=args.lr,
+                 microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
+                 resume=args.resume, seed=args.seed)
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .transformer import Model
+from . import attention, convnet, layers, moe, params, ssm
+
+__all__ = ["Model", "attention", "convnet", "layers", "moe", "params", "ssm"]

@@ -1,0 +1,117 @@
+"""AlexNet with dMath's hybrid parallelism — the paper's own workload (§4).
+
+Conv features run data-parallel (activations dominate), the FC classifier
+runs model-parallel (parameters dominate) — Krizhevsky's one-weird-trick
+[8], which dMath generalizes.  Used by benchmarks/table1.py to reproduce
+the structure of the paper's Table 1 on synthetic ImageNet shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision
+from repro.core.layout import Layout, constrain
+from repro.models.params import ParamSpec, tree_init
+
+# (out_c, kernel, stride, pool) per conv stage — classic AlexNet
+CONV_STAGES = [
+    (96, 11, 4, True),
+    (256, 5, 1, True),
+    (384, 3, 1, False),
+    (384, 3, 1, False),
+    (256, 3, 1, True),
+]
+
+
+def param_specs(plan, mesh, *, n_classes: int = 1000,
+                img_channels: int = 3, fc_dim: int = 4096,
+                scale_down: int = 1) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {}
+    c_in = img_channels
+    for i, (c_out, k, s, _) in enumerate(CONV_STAGES):
+        c_out = max(8, c_out // scale_down)
+        specs[f"conv{i}_w"] = ParamSpec(
+            (k, k, c_in, c_out), Layout.replicated(4), scale=0.05)
+        specs[f"conv{i}_b"] = ParamSpec((c_out,), Layout((None,)),
+                                        init="zeros")
+        c_in = c_out
+    fc = max(16, fc_dim // scale_down)
+    # flattened conv output dim depends on input size; computed at init
+    specs["_meta"] = {"c_last": c_in, "fc": fc, "n_classes": n_classes}
+    return specs
+
+
+def init(key, plan, mesh, *, img_size: int = 224, n_classes: int = 1000,
+         scale_down: int = 1, dtype=jnp.bfloat16):
+    """Materialize params (conv stack + model-parallel FC head)."""
+    specs = param_specs(plan, mesh, n_classes=n_classes,
+                        scale_down=scale_down)
+    meta = specs.pop("_meta")
+    params = tree_init(key, specs)
+    # infer flatten dim with a dummy trace
+    feat = jax.eval_shape(
+        _features, params,
+        jax.ShapeDtypeStruct((1, img_size, img_size, 3), dtype))
+    flat = int(jnp.prod(jnp.asarray(feat.shape[1:])))
+    fc, nc = meta["fc"], meta["n_classes"]
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    tp = plan.tp_axis
+    params["fc1_w"] = _mk(k1, (flat, fc), Layout((None, tp)), mesh, dtype)
+    params["fc2_w"] = _mk(k2, (fc, fc), Layout((tp, None)), mesh, dtype)
+    params["fc3_w"] = _mk(k3, (fc, nc), Layout((None, None)), mesh, dtype)
+    return params
+
+
+def _mk(key, shape, layout, mesh, dtype):
+    w = (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+    return jax.device_put(w, layout.sharding(mesh))
+
+
+def _features(params, x):
+    """Conv feature stack (data parallel, NHWC; fp32 conv — the conv
+    transpose rule requires matching dtypes, and this model only feeds
+    the Table-1 scaling benchmark)."""
+    for i in range(len(CONV_STAGES)):
+        _, k, s, pool = CONV_STAGES[i]
+        w = params[f"conv{i}_w"]
+        x = jax.lax.conv_general_dilated(
+            x.astype(jnp.float32), w.astype(jnp.float32), (s, s), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + params[f"conv{i}_b"].astype(jnp.float32))
+        x = x.astype(w.dtype)
+        if pool:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1),
+                "VALID")
+    return x
+
+
+def forward(params, images, plan, policy=precision.MIXED):
+    """images (B, H, W, 3) -> logits (B, n_classes).
+
+    The flatten boundary is the DP->MP switchpoint: the activations are
+    redistributed from batch-sharded to replicated (one all-gather) and the
+    FC runs col->row model-parallel — dMath §4's hybrid scheme.
+    """
+    x = _features(params, images)
+    B = x.shape[0]
+    x = x.reshape(B, -1)
+    x = constrain(x, Layout((plan.batch_axes, None)))
+    h = precision.matmul(x, params["fc1_w"], policy=policy)
+    h = constrain(jax.nn.relu(h), Layout((plan.batch_axes, plan.tp_axis)))
+    h = precision.matmul(h.astype(x.dtype), params["fc2_w"], policy=policy)
+    h = constrain(jax.nn.relu(h), Layout((plan.batch_axes, None)))
+    logits = precision.matmul(h.astype(x.dtype), params["fc3_w"],
+                              policy=policy)
+    return logits
+
+
+def loss_fn(params, images, labels, plan, policy=precision.MIXED):
+    logits = forward(params, images, plan, policy).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[:, None], 1)[:, 0]
+    return jnp.mean(logz - gold)

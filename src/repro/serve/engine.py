@@ -1,0 +1,125 @@
+"""Batched serving engine: prefill + decode with a persistent KV cache.
+
+The serving analogue of dMath's master/worker split: the engine (master)
+admits requests and issues jitted steps; all tensor state (params, caches)
+is persistent in device memory (§2.1) — nothing crosses the host boundary
+per token except the sampled ids.
+
+Scheduling: static-batch continuous batching.  A fixed B-slot cache is
+allocated once; finished slots are refilled from the queue and their cache
+rows re-prefilled (slot-wise dynamic_update on the batch dim).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S_prompt,) int32
+    max_new_tokens: int = 32
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model, params, batch_slots: int, max_seq: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.B = batch_slots
+        self.T = max_seq
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+
+        self.cache = model.init_cache(batch_slots, max_seq)
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._prefill_one = jax.jit(self._prefill_slot_fn)
+
+    # ------------------------------------------------------------------
+    def _prefill_slot_fn(self, params, cache, tokens, slot):
+        """Prefill one request into cache row ``slot`` (B=1 forward)."""
+        logits, c1 = self.model.prefill(params, tokens)
+        def write(full, one):
+            # one: (L, 1, S, ...) -> pad S to T, write at [.., slot, ..]
+            pad = [(0, 0)] * one.ndim
+            pad[2] = (0, full.shape[2] - one.shape[2])
+            if one.ndim >= 3 and full.shape[2] != one.shape[2] \
+                    and full.ndim == one.ndim:
+                one = jnp.pad(one, pad)
+            return jax.lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), slot, axis=1)
+        cache = jax.tree.map(write, cache, c1)
+        return logits[:, -1, :], cache
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for b in range(self.B):
+            if self.active[b] is None and self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                last_logits, self.cache = self._prefill_one(
+                    self.params, self.cache, toks,
+                    jnp.asarray(b, jnp.int32))
+                nxt = self._sample(last_logits)[0]
+                req.out.append(int(nxt))
+                self.active[b] = req
+                self.pos[b] = len(req.prompt)
+
+    def _sample(self, logits):
+        if self.temperature == 0.0:
+            return np.asarray(jnp.argmax(logits, -1))
+        self.key, k = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            k, logits / self.temperature, axis=-1))
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine tick: admit, decode one token for every active slot."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        tokens = np.zeros((self.B, 1), np.int32)
+        for b, r in enumerate(self.active):
+            if r is not None:
+                tokens[b, 0] = r.out[-1]
+        # single shared position: static-batch engines decode in lockstep;
+        # per-slot masking handles ragged prompts (pos is max over slots)
+        pos = int(max(self.pos[b] for b, r in enumerate(self.active)
+                      if r is not None))
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(pos, jnp.int32))
+        nxt = self._sample(logits[:, 0, :])
+        n_active = 0
+        for b, r in enumerate(self.active):
+            if r is None:
+                continue
+            r.out.append(int(nxt[b]))
+            self.pos[b] = pos + 1
+            n_active += 1
+            if len(r.out) >= r.max_new_tokens or self.pos[b] >= self.T - 1:
+                r.done = True
+                self.active[b] = None
+        return n_active
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        ticks = 0
+        while (self.queue or any(self.active)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return finished

@@ -1,0 +1,154 @@
+"""AdamW with ZeRO-sharded fp32 master state (paper §2.1 replication).
+
+dMath: each worker updates *its chunk* of the model, then asynchronously
+replicates the new parameters for the next forward pass.  Mapping:
+
+- the "chunk" = optimizer state (fp32 master + both moments) laid out with
+  :func:`repro.core.replication.zero_layout` — the param layout plus the
+  ``data`` axis on the first divisible dimension (ZeRO-1);
+- the bf16 *compute* copy of the params keeps its storage layout; GSPMD
+  emits the scatter/gather pair between update and consumption, and the
+  scheduler overlaps the gathers with forward compute (the async
+  replication of §2.1).
+
+Implemented from scratch (no optax): state = {step, mu, nu, master}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import Layout, constrain
+from repro.core.replication import zero_layout
+from repro.models.params import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # moment storage dtype: bf16 halves mu/nu HBM (the paper's §4.2 "store
+    # half, upcast to float before computation" applied to the optimizer);
+    # the master copy always stays fp32.
+    moment_dtype: Any = jnp.float32
+
+
+def _zero_spec(spec: ParamSpec, mesh, dtype=jnp.float32) -> ParamSpec:
+    lay = zero_layout(spec.layout, spec.shape, mesh)
+    return dataclasses.replace(spec, layout=lay, dtype=dtype, init="zeros")
+
+
+def state_specs(param_specs, mesh,
+                adamw: Optional[AdamWConfig] = None) -> Dict[str, Any]:
+    """Spec tree for the optimizer state (ZeRO layouts)."""
+    adamw = adamw or AdamWConfig()
+    is_p = lambda x: isinstance(x, ParamSpec)
+    z = lambda s: _zero_spec(s, mesh, adamw.moment_dtype)
+    master = jax.tree.map(
+        lambda s: dataclasses.replace(_zero_spec(s, mesh), init=s.init,
+                                      scale=s.scale),
+        param_specs, is_leaf=is_p)
+    return {
+        "step": ParamSpec((), Layout(()), dtype=jnp.int32, init="zeros"),
+        "mu": jax.tree.map(z, param_specs, is_leaf=is_p),
+        "nu": jax.tree.map(z, param_specs, is_leaf=is_p),
+        "master": master,
+    }
+
+
+def init_state(params, param_specs, mesh):
+    """Optimizer state from existing (already initialized) params."""
+    is_p = lambda x: isinstance(x, ParamSpec)
+    zeros = jax.tree.map(
+        lambda p, s: jnp.zeros(p.shape, jnp.float32),
+        params, param_specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    shardings = jax.tree.map(
+        lambda s: _zero_spec(s, mesh).sharding(mesh), param_specs,
+        is_leaf=is_p)
+    mu = jax.device_put(zeros, shardings)
+    nu = jax.device_put(zeros, shardings)
+    master = jax.device_put(
+        jax.tree.map(lambda p: p.astype(jnp.float32), params), shardings)
+    return {"step": jnp.zeros((), jnp.int32), "mu": mu, "nu": nu,
+            "master": master}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)))
+
+
+def apply(
+    cfg: AdamWConfig,
+    opt_state: Dict[str, Any],
+    grads,
+    param_specs,
+    mesh,
+    decay_mask: Optional[Any] = None,
+):
+    """One AdamW step.  Returns (new_params_bf16, new_opt_state, stats).
+
+    Math in fp32 on the ZeRO shards; the returned params are cast to the
+    storage dtype and constrained back to their storage layout (the
+    replication boundary).
+    """
+    is_p = lambda x: isinstance(x, ParamSpec)
+    step = opt_state["step"] + 1
+    lr = cfg.lr(step) if callable(cfg.lr) else jnp.asarray(cfg.lr)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else jnp.asarray(1.0)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, master, spec):
+        zlay = zero_layout(spec.layout, spec.shape, mesh)
+        # constrain BEFORE the fp32 cast: the reduce-scatter/slice happens
+        # on the narrow dtype and fp32 only ever exists on the ZeRO shard
+        g = constrain(g, zlay).astype(jnp.float32) * scale
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1.0 - cfg.b1) * g
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1.0 - cfg.b2) * g * g
+        mhat = mu32 / b1c
+        vhat = nu32 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        wd = cfg.weight_decay if master.ndim >= 2 else 0.0
+        master = master - lr * (delta + wd * master)
+        new_p = constrain(master.astype(spec.dtype), spec.layout)
+        return new_p, mu32.astype(mu.dtype), nu32.astype(nu.dtype), master
+
+    out = jax.tree.map(upd, grads, opt_state["mu"], opt_state["nu"],
+                       opt_state["master"], param_specs,
+                       is_leaf=lambda x: isinstance(x, ParamSpec))
+    # unzip the 4-tuples
+    leaves, treedef = jax.tree.flatten(
+        out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 4
+        and not isinstance(x[0], tuple))
+    new_p = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+    mu = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+    nu = jax.tree.unflatten(treedef, [l[2] for l in leaves])
+    master = jax.tree.unflatten(treedef, [l[3] for l in leaves])
+    new_state = {"step": step, "mu": mu, "nu": nu, "master": master}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def warmup_cosine(peak: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(1, warmup)
+        prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return sched

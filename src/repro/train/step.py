@@ -1,0 +1,137 @@
+"""Train-step builder: microbatched grad accumulation + AdamW + donation.
+
+The jitted step is the whole-program unit the dry-run lowers: params enter
+in storage layout, optimizer state in ZeRO layout, the batch in DP layout.
+Buffer donation makes the update in-place (dMath §2.1 memory pooling).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import tree_sds, tree_shardings
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Dict[str, Any]
+
+    def tree_flatten(self):
+        return ((self.params, self.opt), None)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt), None),
+    lambda _, c: TrainState(*c),
+)
+
+
+def state_specs(model, mesh, adamw=None):
+    pspecs = model.param_specs()
+    return {"params": pspecs, "opt": opt.state_specs(pspecs, mesh, adamw)}
+
+
+def state_sds(model, mesh, adamw=None):
+    return jax.tree.map(lambda s: s.sds(), state_specs(model, mesh, adamw),
+                        is_leaf=lambda x: hasattr(x, "sds"))
+
+
+def state_shardings(model, mesh, adamw=None):
+    return jax.tree.map(lambda s: s.sharding(mesh),
+                        state_specs(model, mesh, adamw),
+                        is_leaf=lambda x: hasattr(x, "sds"))
+
+
+def init_state(model, mesh, key) -> TrainState:
+    params = model.init(key)
+    params = jax.device_put(params, model.param_shardings())
+    return TrainState(params=params,
+                      opt=opt.init_state(params, model.param_specs(), mesh))
+
+
+def _split_microbatches(batch, n: int):
+    def split(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def build_train_step(
+    model,
+    mesh,
+    adamw: Optional[opt.AdamWConfig] = None,
+    num_microbatches: int = 1,
+) -> Callable:
+    """Returns train_step(state_dict, batch) -> (state_dict, metrics).
+
+    Grad accumulation runs as a ``lax.scan`` over microbatches with fp32
+    accumulators in param layout (ZeRO-2 cadence: each microbatch's psum
+    over the batch axes is emitted by GSPMD; the accumulator stays sharded
+    wherever the params are).
+    """
+    adamw = adamw or opt.AdamWConfig()
+    pspecs = model.param_specs()
+    from repro.core.layout import constrain
+    from repro.core.replication import zero_layout
+    is_spec = lambda x: hasattr(x, "layout")
+    zlays = jax.tree.map(
+        lambda s: zero_layout(s.layout, s.shape, mesh), pspecs,
+        is_leaf=is_spec)
+
+    def loss_fn(params, mb):
+        return model.loss_fn(params, mb)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if num_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, num_microbatches)
+            # fp32 accumulators live on the ZeRO shards (reduce-scatter per
+            # microbatch) — grads never exist as full fp32 copies
+            acc0 = jax.tree.map(
+                lambda p, zl: constrain(
+                    jnp.zeros(p.shape, jnp.float32), zl),
+                params, zlays)
+
+            def mb_step(acc, mb):
+                (l, m), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi, zl: a + constrain(gi, zl).astype(
+                        jnp.float32),
+                    acc, g, zlays)
+                return acc, (l, m)
+
+            grads, (losses, ms) = jax.lax.scan(mb_step, acc0, mbs)
+            grads = jax.tree.map(
+                lambda g: g / num_microbatches, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(lambda x: jnp.mean(x), ms)
+
+        new_params, new_opt, stats = opt.apply(
+            adamw, state["opt"], grads, pspecs, mesh)
+        metrics = dict(metrics, **stats)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def jit_train_step(model, mesh, train_step, batch_shardings):
+    """jit with explicit in/out shardings + state donation."""
+    st_sh = state_shardings(model, mesh)
+    return jax.jit(
+        train_step,
+        in_shardings=(st_sh, batch_shardings),
+        out_shardings=(st_sh, None),
+        donate_argnums=(0,),
+    )

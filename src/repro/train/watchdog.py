@@ -1,0 +1,45 @@
+"""Straggler detection: step-time watchdog (1000+-node posture, DESIGN §7).
+
+On a real fleet slow steps correlate with failing hosts/links; the watchdog
+keeps an EMA + variance of step time and flags z-score outliers.  The train
+loop consults it to (a) log the anomaly, (b) trigger an early checkpoint —
+the cheap insurance dMath's checkpoint-restart requirement (§2 req. e)
+asks for.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class StepTimeWatchdog:
+    alpha: float = 0.1            # EMA coefficient
+    z_threshold: float = 4.0
+    warmup_steps: int = 5
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    anomalies: List[int] = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> Optional[str]:
+        self.n += 1
+        if self.n <= self.warmup_steps:
+            # prime the estimates, never flag during compile/warmup
+            self.mean = dt if self.n == 1 else \
+                (1 - self.alpha) * self.mean + self.alpha * dt
+            self.var = max(self.var, (dt - self.mean) ** 2)
+            return None
+        std = math.sqrt(self.var) + 1e-9
+        z = (dt - self.mean) / std
+        self.mean = (1 - self.alpha) * self.mean + self.alpha * dt
+        self.var = (1 - self.alpha) * self.var \
+            + self.alpha * (dt - self.mean) ** 2
+        if z > self.z_threshold:
+            self.anomalies.append(step)
+            return (f"straggler suspected at step {step}: "
+                    f"{dt * 1e3:.1f} ms vs EMA {self.mean * 1e3:.1f} ms "
+                    f"(z={z:.1f})")
+        return None

@@ -1,0 +1,154 @@
+"""Distributed GEMM + redistribution correctness on a fake 8-device mesh.
+
+These run in a subprocess-free way: the module re-execs itself under
+XLA_FLAGS if the device count is 1, so the main pytest process keeps seeing
+a single device (per the project rule: only the dry-run forces 512).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+DEVS = 8
+
+
+def _in_child() -> bool:
+    return os.environ.get("REPRO_FAKE_DEVICES") == str(DEVS)
+
+
+if not _in_child():
+    # Parent: run this file in a child with 8 fake devices, report result.
+    def test_gemm_suite_subprocess():
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count={DEVS}")
+        env["REPRO_FAKE_DEVICES"] = str(DEVS)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")]
+            + env.get("PYTHONPATH", "").split(os.pathsep))
+        r = subprocess.run(
+            [sys.executable, "-m", "pytest", "-q", "-x", __file__],
+            env=env, capture_output=True, text=True, timeout=900)
+        if r.returncode != 0:
+            pytest.fail("child failed:\n" + r.stdout[-4000:] + r.stderr[-4000:])
+else:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (
+        DistTensor, Layout, gemm, precision, relayout_explicit,
+    )
+
+    @pytest.fixture(scope="module")
+    def mesh():
+        assert len(jax.devices()) == DEVS
+        return jax.make_mesh(
+            (2, 4), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    def _rand(shape, seed=0, dtype=jnp.float32):
+        return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=dtype)
+
+    M, K, N = 32, 64, 48  # divisible by 4 (model) and 2 (data) and 8
+
+    def test_row_parallel(mesh):
+        a, b = _rand((M, K)), _rand((K, N), 1)
+        c = gemm.gemm_row_parallel(a, b, mesh, policy=precision.FULL)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_col_parallel(mesh):
+        a, b = _rand((M, K)), _rand((K, N), 1)
+        c = gemm.gemm_col_parallel(a, b, mesh, policy=precision.FULL)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_inner_psum(mesh):
+        a, b = _rand((M, K)), _rand((K, N), 1)
+        c = gemm.gemm_inner_psum(a, b, mesh, policy=precision.FULL)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_inner_rs(mesh):
+        a, b = _rand((M, K)), _rand((K, N), 1)
+        c = gemm.gemm_inner_rs(a, b, mesh, policy=precision.FULL)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_summa2d(mesh):
+        a, b = _rand((M, K)), _rand((K, N), 1)
+        c = gemm.gemm_summa2d(a, b, mesh, policy=precision.FULL)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("la", ["rep", "row", "col", "b2d"])
+    @pytest.mark.parametrize("lb", ["rep", "row", "col", "b2d"])
+    def test_gemm_auto_layout_independence(mesh, la, lb):
+        """Paper §3.2: GEMM is correct for ANY pair of operand layouts."""
+        mk = {
+            "rep": Layout.replicated(2),
+            "row": Layout.row_sharded(2, "model"),
+            "col": Layout.col_sharded(2, "model"),
+            "b2d": Layout.blocked_2d(("data", "model")),
+        }
+        a, b = _rand((M, K)), _rand((K, N), 1)
+        c, plan = gemm.gemm_auto(a, b, mk[la], mk[lb], mesh,
+                                 policy=precision.FULL)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_gemm_auto_out_layout(mesh):
+        a, b = _rand((M, K)), _rand((K, N), 1)
+        out_layout = Layout.row_sharded(2, "model")
+        c, plan = gemm.gemm_auto(
+            a, b, Layout.col_sharded(2, "model"),
+            Layout.row_sharded(2, "model"), mesh,
+            out_layout=out_layout, policy=precision.FULL)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_relayout_roundtrip(mesh):
+        x = _rand((M, K))
+        src = Layout.row_sharded(2, "model")
+        for dst in [Layout.replicated(2), Layout.col_sharded(2, "model"),
+                    Layout.blocked_2d(("data", "model"))]:
+            y = relayout_explicit(x, src, dst, mesh)
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+    def test_relayout_precision_change(mesh):
+        """§3.3: change precision during reshape (narrow before the wire)."""
+        x = _rand((M, K))
+        y = relayout_explicit(x, Layout.row_sharded(2, "model"),
+                              Layout.replicated(2), mesh, dtype=jnp.bfloat16)
+        assert y.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(y, dtype=np.float32),
+                                   np.asarray(x), rtol=1e-2, atol=1e-2)
+
+    def test_disttensor_api(mesh):
+        """§2: 'the developer uses dMath like any other math library'."""
+        a = DistTensor.shard(_rand((M, K)), Layout.row_sharded(2, "model"),
+                             mesh, name="A", policy=precision.FULL)
+        b = DistTensor.shard(_rand((K, N), 1), Layout.replicated(2),
+                             mesh, name="B", policy=precision.FULL)
+        c = a @ b
+        np.testing.assert_allclose(
+            np.asarray(c.to_global()),
+            np.asarray(a.to_global()) @ np.asarray(b.to_global()),
+            rtol=2e-5, atol=2e-5)
+        from repro.core import REGISTRY
+        assert REGISTRY.lookup("A") is not None
+
+    def test_opcache_single_plan(mesh):
+        """§3.3: a fixed pipeline compiles each op exactly once."""
+        from repro.core.opcache import OpCache
+        from repro.core import gemm as G
+        cache = OpCache("test")
+        a, b = _rand((M, K)), _rand((K, N), 1)
+        for _ in range(5):
+            G.gemm_auto(a, b, Layout.replicated(2), Layout.replicated(2),
+                        mesh, policy=precision.FULL, cache=cache)
+        st = cache.stats()["gemm_auto"]
+        assert st.compiles == 1 and st.hits == 4

@@ -1,0 +1,159 @@
+"""Per-kernel interpret-mode validation against the pure-jnp oracles.
+
+Shape/dtype sweeps per the project brief: every Pallas kernel is executed
+with interpret=True (Python on CPU) and asserted allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import gemm as kgemm
+from repro.kernels import ref
+from repro.kernels import ssd_scan as kssd
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# GEMM
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 512, 128),
+                                   (64, 256, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_kernel(m, k, n, dtype):
+    a, b = _rand(0, (m, k), dtype), _rand(1, (k, n), dtype)
+    got = kgemm.matmul(a, b, bm=64, bn=128, bk=128, interpret=True)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-2)
+
+
+def test_gemm_fp32_accumulation():
+    """bf16 storage with fp32 accumulation beats bf16 accumulation (§4.2)."""
+    a = _rand(0, (128, 512), jnp.bfloat16)
+    b = _rand(1, (512, 128), jnp.bfloat16)
+    exact = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    ours = np.asarray(
+        kgemm.matmul(a, b, bm=64, bn=64, bk=128, out_dtype=jnp.float32,
+                     interpret=True), np.float64)
+    naive = np.asarray(
+        (a.astype(jnp.bfloat16) @ b.astype(jnp.bfloat16)), np.float64)
+    assert np.abs(ours - exact).mean() <= np.abs(naive - exact).mean()
+
+
+# --------------------------------------------------------------------------
+# Flash attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_attention_gqa(hq, hkv, dtype):
+    B, S, D = 2, 256, 64
+    q = _rand(0, (B, hq, S, D), dtype)
+    k = _rand(1, (B, hkv, S, D), dtype)
+    v = _rand(2, (B, hkv, S, D), dtype)
+    got = fa.attention(q, k, v, causal=True, bq=128, bkv=128, interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=3e-2 if dtype == jnp.bfloat16 else 2e-5, atol=2e-2)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_attention_sliding_window(window):
+    B, H, S, D = 1, 2, 256, 64
+    q, k, v = (_rand(i, (B, H, S, D), jnp.float32) for i in range(3))
+    got = fa.attention(q, k, v, causal=True, window=window,
+                       bq=64, bkv=64, interpret=True)
+    want = ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-5)
+
+
+def test_attention_softcap():
+    B, H, S, D = 1, 2, 128, 64
+    q, k, v = (_rand(i, (B, H, S, D), jnp.float32) for i in range(3))
+    got = fa.attention(q, k, v, causal=True, softcap=30.0,
+                       bq=64, bkv=64, interpret=True)
+    want = ref.attention(q, k, v, causal=True, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-5)
+
+
+def test_attention_decode_offset():
+    """One query against a long KV history (decode path, q_offset=T-1)."""
+    B, H, T, D = 2, 4, 256, 64
+    q = _rand(0, (B, H, 128, D), jnp.float32)   # last 128 positions
+    k = _rand(1, (B, H, T, D), jnp.float32)
+    v = _rand(2, (B, H, T, D), jnp.float32)
+    got = fa.attention(q, k, v, causal=True, q_offset=T - 128,
+                       bq=64, bkv=64, interpret=True)
+    want = ref.attention(q, k, v, causal=True, q_offset=T - 128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# SSD scan
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,g", [(4, 1), (4, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel(h, g, dtype):
+    B, S, P, N = 2, 256, 32, 16
+    x = _rand(0, (B, S, h, P), dtype)
+    dt = jax.nn.softplus(_rand(1, (B, S, h), jnp.float32))
+    A = -jnp.exp(_rand(2, (h,), jnp.float32))
+    Bm = _rand(3, (B, S, g, N), dtype)
+    C = _rand(4, (B, S, g, N), dtype)
+    y_got, s_got = kssd.ssd(x, dt, A, Bm, C, chunk=64, interpret=True)
+    y_want, s_want = ref.ssd(x, dt, A, Bm, C)
+    rtol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(y_got, np.float32),
+                               np.asarray(y_want, np.float32),
+                               rtol=rtol, atol=rtol)
+    np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_want),
+                               rtol=rtol, atol=rtol)
+
+
+def test_ssd_chunk_invariance():
+    """Kernel result must not depend on the chunk size (pure tiling knob)."""
+    B, S, H, P, N = 1, 128, 2, 16, 8
+    x = _rand(0, (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(_rand(1, (B, S, H), jnp.float32))
+    A = -jnp.exp(_rand(2, (H,), jnp.float32))
+    Bm = _rand(3, (B, S, 1, N), jnp.float32)
+    C = _rand(4, (B, S, 1, N), jnp.float32)
+    y32, _ = kssd.ssd(x, dt, A, Bm, C, chunk=32, interpret=True)
+    y128, _ = kssd.ssd(x, dt, A, Bm, C, chunk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y128),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_step_matches_scan():
+    """Decode recurrence step == one step of the training scan."""
+    B, H, P, N = 2, 4, 16, 8
+    x = _rand(0, (B, 4, H, P), jnp.float32)
+    dt = jax.nn.softplus(_rand(1, (B, 4, H), jnp.float32))
+    A = -jnp.exp(_rand(2, (H,), jnp.float32))
+    Bm = _rand(3, (B, 4, 1, N), jnp.float32)
+    C = _rand(4, (B, 4, 1, N), jnp.float32)
+    y_scan, s_scan = ref.ssd(x, dt, A, Bm, C)
+
+    state = jnp.zeros((B, H, P, N), jnp.float32)
+    ys = []
+    for t in range(4):
+        y_t, state = ref.ssd_step(x[:, t], dt[:, t], A, Bm[:, t], C[:, t],
+                                  state)
+        ys.append(y_t)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_scan), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s_scan),
+                               rtol=1e-5, atol=1e-5)

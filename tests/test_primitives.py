@@ -1,0 +1,72 @@
+"""Paper-named distributed primitives: AddRowColSumMatrix (§2.3) and the
+halo-exchange distributed convolution (§1's kernel list)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+DEVS = 8
+
+
+def _in_child() -> bool:
+    return os.environ.get("REPRO_PRIM_CHILD") == str(DEVS)
+
+
+if not _in_child():
+    def test_primitives_subprocess():
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count={DEVS}")
+        env["REPRO_PRIM_CHILD"] = str(DEVS)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")]
+            + env.get("PYTHONPATH", "").split(os.pathsep))
+        r = subprocess.run(
+            [sys.executable, "-m", "pytest", "-q", "-x", __file__],
+            env=env, capture_output=True, text=True, timeout=900)
+        if r.returncode != 0:
+            pytest.fail("child failed:\n" + r.stdout[-3000:]
+                        + r.stderr[-2000:])
+else:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.primitives import add_row_col_sum_matrix, conv2d_halo
+
+    @pytest.fixture(scope="module")
+    def mesh():
+        return jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    @pytest.mark.parametrize("deterministic", [True, False])
+    def test_add_row_col_sum_matrix(mesh, deterministic):
+        m = jax.random.normal(jax.random.PRNGKey(0), (32, 24))
+        got = add_row_col_sum_matrix(m, 0.5, 0.25, mesh=mesh,
+                                     deterministic=deterministic)
+        mm = np.asarray(m, np.float64)
+        want = mm + 0.5 * mm.sum(1, keepdims=True) \
+            + 0.25 * mm.sum(0, keepdims=True)
+        tol = 1e-5 if deterministic else 5e-2   # bf16 colsum in fast mode
+        np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                                   rtol=tol, atol=tol * 10)
+
+    def test_add_row_col_sum_deterministic_is_bitwise_stable(mesh):
+        m = jax.random.normal(jax.random.PRNGKey(1), (32, 24))
+        a = add_row_col_sum_matrix(m, mesh=mesh, deterministic=True)
+        b = add_row_col_sum_matrix(m, mesh=mesh, deterministic=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("kh,kw", [(1, 1), (3, 3), (5, 3)])
+    def test_conv2d_halo_matches_local(mesh, kh, kw):
+        """Spatially-sharded conv == unsharded conv (halo correctness)."""
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 16, 12, 3))
+        w = jax.random.normal(jax.random.PRNGKey(3), (kh, kw, 3, 5)) * 0.2
+        got = conv2d_halo(x, w, mesh=mesh)
+        want = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)

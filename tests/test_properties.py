@@ -1,0 +1,199 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, input_specs
+from repro.core.layout import Layout
+from repro.core.planner import plan_for
+from repro.kernels import ref
+from repro.models import layers as L
+from repro.models.ssm import ssd_chunked
+from repro.train.compression import quantize_int8, quantize_onebit
+
+SET = settings(max_examples=25, deadline=None)
+
+
+# --------------------------------------------------------------------------
+# Layout algebra invariants
+# --------------------------------------------------------------------------
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+mesh_s = st.fixed_dictionaries({"data": st.sampled_from([1, 2, 4, 16]),
+                                "model": st.sampled_from([1, 2, 4, 16])})
+
+
+@SET
+@given(mesh_s, st.integers(1, 8), st.integers(1, 8))
+def test_layout_local_shape_product(mesh_shape, a, b):
+    """prod(local) * num_shards == prod(global) whenever divisible."""
+    mesh = _FakeMesh(mesh_shape)
+    shape = (a * mesh_shape["data"], b * mesh_shape["model"])
+    lay = Layout.blocked_2d(("data", "model"))
+    local = lay.local_shape(shape, mesh)
+    assert np.prod(local) * lay.num_shards(mesh) == np.prod(shape)
+
+
+@SET
+@given(mesh_s)
+def test_layout_drop_axis_replicates(mesh_shape):
+    mesh = _FakeMesh(mesh_shape)
+    lay = Layout.blocked_2d(("data", "model"))
+    assert lay.drop_axis("data").drop_axis("model").is_replicated()
+
+
+def test_planner_layouts_always_divisible_on_production_mesh():
+    """THE planner invariant: every param/cache layout it assigns divides
+    the production mesh exactly (JAX hard-requires this)."""
+    from repro.models import Model
+
+    class _M:
+        shape = {"data": 16, "model": 16}
+
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        plan = plan_for(cfg, _M)
+        model = Model(cfg, _M, plan)
+        specs = model.param_specs()
+        flat, _ = jax.tree.flatten(
+            specs, is_leaf=lambda x: hasattr(x, "layout"))
+        for s in flat:
+            assert s.layout.divisible(s.shape, _M), (arch, s.shape,
+                                                     s.layout)
+        for shape_name, sh in SHAPES.items():
+            if sh.kind == "long_decode" and not cfg.supports_long_context():
+                continue
+            if not sh.is_decode:
+                continue
+            cspecs = model.cache_specs(sh.global_batch, sh.seq_len)
+            flat_c, _ = jax.tree.flatten(
+                cspecs, is_leaf=lambda x: hasattr(x, "layout"))
+            for s in flat_c:
+                assert s.layout.divisible(s.shape, _M), \
+                    (arch, shape_name, s.shape, s.layout)
+
+
+# --------------------------------------------------------------------------
+# numerics properties
+# --------------------------------------------------------------------------
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+def test_rotary_preserves_norm(seed, pos):
+    """Rotary embedding is orthogonal: ||rot(x)|| == ||x||."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 3, 4, 32))
+    y = L.rotary(x, jnp.asarray([pos, pos + 1, pos + 7]), 1e4)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+@SET
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from([(1, 4, 4), (2, 4, 2), (2, 8, 1)]),
+       st.sampled_from([64, 96, 128]),
+       st.sampled_from([None, 32]),
+       st.sampled_from([None, 20.0]))
+def test_flash_jnp_matches_oracle(seed, bhh, S, window, softcap):
+    """The production attention == the quadratic oracle, all variants."""
+    B, Hq, Hkv = bhh
+    D = 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D))
+    k = jax.random.normal(ks[1], (B, Hkv, S, D))
+    v = jax.random.normal(ks[2], (B, Hkv, S, D))
+    got = L.flash_attention_jnp(q, k, v, causal=True, window=window,
+                                softcap=softcap, bq=32, bkv=32)
+    want = ref.attention(q, k, v, causal=True, window=window,
+                         softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 32, 64]),
+       st.sampled_from([(2, 1), (4, 2)]))
+def test_ssd_chunked_matches_oracle(seed, S, hg):
+    H, G = hg
+    B, P, N = 2, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    C = jax.random.normal(ks[4], (B, S, G, N))
+    y1, s1 = ssd_chunked(x, dt, A, Bm, C, chunk=16)
+    y2, s2 = ref.ssd(x, dt, A, Bm, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-3, atol=2e-3)
+
+
+@SET
+@given(st.integers(0, 2**31 - 1))
+def test_lm_loss_uniform_logits(seed):
+    """Uniform logits => loss == log(real_vocab), independent of padding."""
+    V_real, V_pad = 100, 128
+    logits = jnp.zeros((2, 8, V_pad))
+    labels = jax.random.randint(jax.random.PRNGKey(seed), (2, 8), 0, V_real)
+    loss, _ = L.lm_loss(logits, labels, vocab_real=V_real)
+    np.testing.assert_allclose(float(loss), np.log(V_real), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# compression: error feedback is lossless in aggregate
+# --------------------------------------------------------------------------
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["onebit", "int8"]))
+def test_error_feedback_identity(seed, scheme):
+    """q + err_new == g + err_old exactly (EF conservation)."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    err = jax.random.normal(jax.random.PRNGKey(seed + 1), (64,)) * 0.1
+    quant = quantize_onebit if scheme == "onebit" else quantize_int8
+    q, err_new = quant(g, err)
+    np.testing.assert_allclose(np.asarray(q + err_new),
+                               np.asarray(g + err), rtol=1e-5, atol=1e-6)
+
+
+@SET
+@given(st.integers(0, 2**31 - 1))
+def test_onebit_ef_sgd_converges(seed):
+    """EF-compressed GD still minimizes a quadratic (Seide'14 property)."""
+    key = jax.random.PRNGKey(seed)
+    target = jax.random.normal(key, (16,))
+    w = jnp.zeros(16)
+    err = jnp.zeros(16)
+    for _ in range(300):
+        g = w - target
+        q, err = quantize_onebit(g, err)
+        w = w - 0.2 * q
+    assert float(jnp.linalg.norm(w - target)) < 0.15 * float(
+        jnp.linalg.norm(target) + 1.0)
+
+
+# --------------------------------------------------------------------------
+# input_specs: every cell produces shardable specs
+# --------------------------------------------------------------------------
+
+def test_input_specs_all_cells_divisible():
+    class _M:
+        shape = {"data": 16, "model": 16}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        plan = plan_for(cfg, _M)
+        for sh in SHAPES.values():
+            if sh.kind == "long_decode" and not cfg.supports_long_context():
+                continue
+            sds, _ = input_specs(cfg, sh, _M, plan,
+                                 make_shardings=False)
+            for leaf in jax.tree.leaves(sds):
+                assert all(d >= 0 for d in leaf.shape)

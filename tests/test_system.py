@@ -1,0 +1,142 @@
+"""End-to-end behaviour tests for the system (replaces the placeholder).
+
+- training actually learns (loss drops on a learnable synthetic task),
+- the serving engine completes batched requests deterministically,
+- the data pipeline feeds training through threads + autotune,
+- the watchdog flags injected stragglers.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.planner import plan_for
+from repro.data import Pipeline, Stage, SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.models import Model
+from repro.serve import Engine, Request
+from repro.train import (AdamWConfig, StepTimeWatchdog, build_train_step,
+                         init_state, warmup_cosine)
+
+TINY = ModelConfig(name="sys-tiny", family="dense", n_layers=2,
+                   d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                   d_ff=128, vocab_size=64)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_training_learns_copy_task(mesh):
+    """Next-token prediction on a fixed repeating sequence must -> ~0."""
+    with jax.set_mesh(mesh):
+        plan = plan_for(TINY, mesh)
+        model = Model(TINY, mesh, plan, q_chunk=16, kv_chunk=16)
+        ts = jax.jit(build_train_step(
+            model, mesh, AdamWConfig(lr=warmup_cosine(2e-2, 5, 80),
+                                     weight_decay=0.0)))
+        st = init_state(model, mesh, jax.random.PRNGKey(0))
+        state = {"params": st.params, "opt": st.opt}
+
+        seq = jnp.tile(jnp.arange(8, dtype=jnp.int32), (4, 4))   # (4, 32)
+        batch = {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+        losses = []
+        for _ in range(80):
+            state, m = ts(state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < 0.35 * losses[0], (losses[0], losses[-1])
+        assert losses[-1] < 1.0
+
+
+def test_engine_batched_requests_deterministic(mesh):
+    with jax.set_mesh(mesh):
+        plan = plan_for(TINY, mesh)
+        model = Model(TINY, mesh, plan, q_chunk=16, kv_chunk=16)
+        params = model.init(jax.random.PRNGKey(3))
+        params = jax.device_put(params, model.param_shardings())
+
+        def gen():
+            eng = Engine(model, params, batch_slots=2, max_seq=64)
+            outs = {}
+            for rid in range(4):
+                eng.submit(Request(
+                    rid=rid,
+                    prompt=np.arange(5, dtype=np.int32) + rid,
+                    max_new_tokens=6))
+            ticks = 0
+            while (eng.queue or any(r is not None for r in eng.active)) \
+                    and ticks < 200:
+                done_before = [r for r in eng.active]
+                eng.step()
+                ticks += 1
+            return eng
+
+        # run twice: greedy decode must be reproducible (paper §2.3)
+        # capture outputs via the Request objects we submitted
+        reqs1 = [Request(rid=r, prompt=np.arange(5, dtype=np.int32) + r,
+                         max_new_tokens=6) for r in range(4)]
+        reqs2 = [Request(rid=r, prompt=np.arange(5, dtype=np.int32) + r,
+                         max_new_tokens=6) for r in range(4)]
+        for reqs in (reqs1, reqs2):
+            eng = Engine(model, params, batch_slots=2, max_seq=64)
+            for r in reqs:
+                eng.submit(r)
+            ticks = 0
+            while (eng.queue or any(x is not None for x in eng.active)) \
+                    and ticks < 200:
+                eng.step()
+                ticks += 1
+        for a, b in zip(reqs1, reqs2):
+            assert a.done and b.done
+            assert a.out == b.out, (a.rid, a.out, b.out)
+
+
+def test_pipeline_feeds_training(mesh):
+    with jax.set_mesh(mesh):
+        plan = plan_for(TINY, mesh)
+        model = Model(TINY, mesh, plan, q_chunk=16, kv_chunk=16)
+        ts = jax.jit(build_train_step(model, mesh))
+        st = init_state(model, mesh, jax.random.PRNGKey(0))
+        state = {"params": st.params, "opt": st.opt}
+
+        pipe = Pipeline(SyntheticLM(TINY.vocab_size, 4, 16, seed=1),
+                        [Stage("noop", lambda x: x, "either")],
+                        n_threads=2).start()
+        try:
+            for _ in range(5):
+                b = next(pipe)
+                state, m = ts(state, jax.tree.map(jnp.asarray, b))
+            assert np.isfinite(float(m["loss"]))
+        finally:
+            pipe.stop()
+
+
+def test_pipeline_autotune():
+    pipe = Pipeline(SyntheticLM(64, 2, 8, seed=0),
+                    [Stage("scale", lambda x: x, "either")],
+                    n_threads=1).start()
+    try:
+        result = pipe.autotune(lambda b: None, candidates_threads=(1, 2),
+                               samples=4)
+        assert result["samples_per_sec"] > 0
+        assert result["n_threads"] in (1, 2)
+    finally:
+        pipe.stop()
+
+
+def test_watchdog_flags_straggler():
+    dog = StepTimeWatchdog(warmup_steps=3, z_threshold=3.0)
+    for i in range(20):
+        assert dog.observe(i, 0.1 + 0.001 * (i % 3)) is None
+    msg = dog.observe(20, 1.5)          # injected straggler
+    assert msg is not None and "straggler" in msg
+    assert dog.anomalies == [20]
+
+
+def test_synthetic_stream_deterministic():
+    a = next(iter(SyntheticLM(100, 2, 8, seed=7)))
+    b = next(iter(SyntheticLM(100, 2, 8, seed=7)))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
