@@ -75,8 +75,10 @@ class Instr:
     rest: str        # operand list + attributes (raw tail of the line)
 
     def operands(self) -> List[str]:
-        # ``rest`` starts just AFTER the opening paren of the op call
+        # ``rest`` starts just AFTER the opening paren of the op call;
+        # commas inside shape brackets ("f32[256,256]{1,0}") don't split
         depth = 1
+        bracket = 0
         args = []
         cur = []
         for ch in self.rest:
@@ -87,12 +89,24 @@ class Instr:
                 if depth == 0:
                     args.append("".join(cur))
                     break
+            elif ch in "[{":
+                bracket += 1
+            elif ch in "]}":
+                bracket -= 1
             if depth >= 1:
                 cur.append(ch)
-                if ch == "," and depth == 1:
+                if ch == "," and depth == 1 and bracket == 0:
                     args.append("".join(cur[:-1]))
                     cur = []
-        return [a.strip().lstrip("%") for a in args if a.strip()]
+        out = []
+        for a in args:
+            a = a.strip()
+            if not a:
+                continue
+            # older HLO dialects print operand types inline
+            # ("dot(f32[8,8]{1,0} %x, ...)"); the name is the last token
+            out.append(a.split()[-1].lstrip("%"))
+        return out
 
 
 @dataclasses.dataclass
@@ -325,6 +339,58 @@ class HloModule:
     def total(self) -> Cost:
         assert self.entry, "no ENTRY computation found"
         return self.cost_of(self.entry)
+
+
+# Per-collective ring-step counts for the alpha (latency) term of the
+# time estimate; n is the group size.
+_COLL_STEPS = {"all-reduce": lambda n: 2 * (n - 1),
+               "all-gather": lambda n: n - 1,
+               "reduce-scatter": lambda n: n - 1,
+               "all-to-all": lambda n: n - 1,
+               "collective-permute": lambda n: 1}
+
+
+def allreduce_wire_bytes(nbytes: float, n: int, schedule: str,
+                         intra_size: int = 1) -> float:
+    """Per-device wire bytes for one all-reduce of ``nbytes`` by schedule.
+
+    Mirrors the schedules in ``repro.comms.schedules`` so plan scoring and
+    HLO accounting agree.  ``hier`` splits across the two levels and
+    returns the total (intranode RS+AG on the full buffer + internode
+    all-reduce on the 1/intra_size slice).
+    """
+    if n <= 1:
+        return 0.0
+    if schedule in ("psum", "ring", "rsag"):
+        return 2.0 * nbytes * (n - 1) / n
+    if schedule == "tree":
+        return nbytes * math.ceil(math.log2(n))
+    if schedule == "hier":
+        ni = max(1, intra_size)
+        nn = max(1, n // ni)
+        intra = 2.0 * nbytes * (ni - 1) / ni
+        inter = 2.0 * (nbytes / ni) * (nn - 1) / nn
+        return intra + inter
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
+def collective_seconds(cost: Cost, topology, n: Optional[int] = None) -> float:
+    """Alpha-beta time estimate for a Cost's collectives on a topology.
+
+    ``topology`` is a :class:`repro.comms.topology.Topology`.  The wire
+    term prices every byte at the slowest link the mesh crosses (internode
+    when the topology spans nodes); the latency term charges ring-schedule
+    step counts per collective.  A deliberate upper bound — GSPMD may
+    place some collectives intranode — but consistent across cells, so
+    deltas between plans are meaningful (the planner only compares).
+    """
+    n = n or topology.world_size
+    link = topology.inter if topology.inter_size > 1 else topology.intra
+    seconds = cost.coll_wire / link.bandwidth_Bps
+    for op, count in cost.coll_counts.items():
+        steps = _COLL_STEPS.get(op, lambda m: m - 1)(max(n, 2))
+        seconds += count * steps * link.latency_s
+    return seconds
 
 
 def analyze_text(text: str) -> Cost:

@@ -1,0 +1,36 @@
+"""repro.comms — hierarchical collective-communication subsystem.
+
+Makes the communication layer dMath treats as first-class (topology-aware
+collectives, gradient bucketing, reduced-precision wire formats) explicit
+in the reproduction:
+
+- :mod:`~repro.comms.topology`   — two-level intranode/internode model of
+  the mesh + alpha-beta cost model per schedule
+- :mod:`~repro.comms.schedules`  — explicit shard_map all-reduces: ring,
+  reduce-scatter+all-gather, recursive-doubling tree, hierarchical
+- :mod:`~repro.comms.bucketer`   — deterministic flatten/unflatten of
+  gradient pytrees into fixed-size buckets
+- :mod:`~repro.comms.compressed` — bf16/int8-on-the-wire collectives
+- :mod:`~repro.comms.plan`       — :class:`CommsPlan` + :func:`sync_tree`,
+  the entry point ``train/step.py`` routes gradient sync through
+"""
+
+from . import bucketer, compressed, plan, schedules, topology
+from .bucketer import BucketPlan, flatten_buckets, plan_buckets, unflatten_buckets
+from .compressed import WIRE_RATIO, wire_all_reduce
+from .plan import CommsPlan, sync_tree
+from .schedules import (all_reduce, hierarchical_all_reduce, ring_all_reduce,
+                        reduce_scatter_all_gather, tree_all_reduce)
+from .topology import (FDR_IB, PCIE_GEN3, SCHEDULES, LinkSpec, Topology,
+                       topology_from_mesh)
+
+__all__ = [
+    "Topology", "LinkSpec", "topology_from_mesh", "SCHEDULES",
+    "PCIE_GEN3", "FDR_IB",
+    "ring_all_reduce", "reduce_scatter_all_gather", "tree_all_reduce",
+    "hierarchical_all_reduce", "all_reduce",
+    "BucketPlan", "plan_buckets", "flatten_buckets", "unflatten_buckets",
+    "wire_all_reduce", "WIRE_RATIO",
+    "CommsPlan", "sync_tree",
+    "topology", "schedules", "bucketer", "compressed", "plan",
+]

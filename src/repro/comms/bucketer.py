@@ -1,0 +1,108 @@
+"""Gradient bucketing: coalesce many small tensors into fixed-size buckets.
+
+A model emits hundreds of gradient tensors, most tiny (norms, biases); one
+collective per tensor pays the latency alpha hundreds of times.  dMath's
+communication layer amortizes this by moving few large buffers; the JAX
+equivalent is to flatten the gradient pytree into a handful of fixed-size
+1-D buckets, run one collective per bucket, and scatter the result back.
+
+The plan is *deterministic*: leaves are packed greedily in pytree-flatten
+order (stable for a fixed tree structure), so every device — and every
+step — builds byte-identical buckets.  That is what makes the collective
+well-defined: device i's bucket k holds the same (leaf, offset) pairs as
+device j's (dMath §2.1: every worker knows the layout of every matrix).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BUCKET_BYTES = 32 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class _Slot:
+    bucket: int      # which bucket this leaf landed in
+    offset: int      # element offset inside the bucket
+    size: int        # number of elements
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static packing of a pytree into 1-D buckets (hashable metadata only)."""
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    slots: Tuple[_Slot, ...]
+    bucket_sizes: Tuple[int, ...]        # elements per bucket
+    dtype: Any                           # bucket compute dtype
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.bucket_sizes)
+
+    def total_bytes(self) -> int:
+        item = jnp.dtype(self.dtype).itemsize
+        return sum(self.bucket_sizes) * item
+
+    def max_bucket_bytes(self) -> int:
+        item = jnp.dtype(self.dtype).itemsize
+        return max(self.bucket_sizes, default=0) * item
+
+
+def plan_buckets(tree, bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                 dtype=jnp.float32) -> BucketPlan:
+    """Greedy first-fit packing in deterministic pytree-flatten order.
+
+    A bucket closes when the next leaf would push it past ``bucket_bytes``;
+    a single leaf larger than the budget gets a bucket of its own (it is
+    already big enough to amortize the latency).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    itemsize = jnp.dtype(dtype).itemsize
+    cap = max(1, bucket_bytes // itemsize)
+
+    shapes, dtypes, slots = [], [], []
+    bucket_sizes: List[int] = []
+    cur_fill = 0
+    for leaf in leaves:
+        size = int(leaf.size)
+        shapes.append(tuple(leaf.shape))
+        dtypes.append(jnp.dtype(leaf.dtype))
+        if not bucket_sizes or (cur_fill and cur_fill + size > cap):
+            bucket_sizes.append(0)
+            cur_fill = 0
+        slots.append(_Slot(bucket=len(bucket_sizes) - 1, offset=cur_fill,
+                           size=size))
+        cur_fill += size
+        bucket_sizes[-1] = cur_fill
+    return BucketPlan(treedef=treedef, shapes=tuple(shapes),
+                      dtypes=tuple(dtypes), slots=tuple(slots),
+                      bucket_sizes=tuple(bucket_sizes),
+                      dtype=jnp.dtype(dtype))
+
+
+def flatten_buckets(plan: BucketPlan, tree) -> List[jax.Array]:
+    """Pack the pytree's leaves into the plan's 1-D buckets (cast to the
+    bucket dtype)."""
+    leaves = jax.tree.leaves(tree)
+    assert len(leaves) == len(plan.slots), "tree does not match plan"
+    parts: List[List[jax.Array]] = [[] for _ in range(plan.num_buckets)]
+    for leaf, slot in zip(leaves, plan.slots):
+        parts[slot.bucket].append(leaf.reshape(-1).astype(plan.dtype))
+    return [jnp.concatenate(p) if len(p) > 1 else p[0] for p in parts]
+
+
+def unflatten_buckets(plan: BucketPlan, buckets: Sequence[jax.Array]):
+    """Invert :func:`flatten_buckets`, restoring shapes and dtypes."""
+    leaves = []
+    for shape, dt, slot in zip(plan.shapes, plan.dtypes, plan.slots):
+        piece = jax.lax.dynamic_slice_in_dim(
+            buckets[slot.bucket], slot.offset, slot.size)
+        leaves.append(piece.reshape(shape).astype(dt))
+    return jax.tree.unflatten(plan.treedef, leaves)

@@ -1,0 +1,75 @@
+"""Reduced-precision wire formats for the explicit all-reduce schedules.
+
+dMath §4.2: "reduced precision data types enable even better scaling ...
+by reducing data transfer size".  Two wire formats, composed with any
+schedule from :mod:`repro.comms.schedules`:
+
+- ``bf16``: the cast-before-collective trick from
+  :func:`repro.core.redistribute.relayout` — narrow *before* the collective
+  so the wire moves 2-byte values, widen back to the accumulation dtype
+  after.
+- ``int8``: per-bucket absmax affine quantization (the codec family in
+  :mod:`repro.train.compression`); the scale is agreed across the group
+  with a ``pmax`` so every device dequantizes identically, and the
+  reduction itself runs on integers (int32 accumulators — the sum of n
+  int8 values needs log2(127 n) bits, so int32 is exact up to n ~ 2^24).
+
+Wire accounting follows the repo convention (see train/compression.py):
+on this CPU simulator the int8 path physically moves int32 through the
+schedule, but the numerics are exactly the deployed quantize -> integer-sum
+-> dequantize semantics and the cost model credits the 1-byte wire format.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import schedules
+
+#: bytes-on-the-wire per fp32 element, per wire format (cost-model input).
+WIRE_RATIO = {None: 1.0, "none": 1.0, "bf16": 0.5, "int8": 0.25}
+
+
+def _group_max(x: jax.Array, axes: Sequence[str]) -> jax.Array:
+    for ax in axes:
+        x = jax.lax.pmax(x, ax)
+    return x
+
+
+def wire_all_reduce(
+    x: jax.Array,
+    axes: Sequence[str],
+    schedule: str = "psum",
+    wire_dtype: Optional[str] = None,
+    intra_axis: str = "model",
+) -> jax.Array:
+    """All-reduce ``x`` over ``axes`` with the given schedule + wire format.
+
+    Runs inside a shard_map body (x is the local block).  Returns the group
+    sum in ``x``'s dtype; ``wire_dtype`` trades precision for wire bytes.
+    """
+    axes = tuple(axes)
+    if not axes:
+        return x
+    if wire_dtype in (None, "none", "fp32"):
+        return schedules.all_reduce(x, axes, schedule, intra_axis)
+
+    if wire_dtype == "bf16":
+        # narrow BEFORE the collective so the wire sees 2-byte values
+        narrow = x.astype(jnp.bfloat16)
+        out = schedules.all_reduce(narrow, axes, schedule, intra_axis)
+        return out.astype(x.dtype)
+
+    if wire_dtype == "int8":
+        v = x.astype(jnp.float32)
+        absmax = _group_max(jnp.max(jnp.abs(v)), axes)
+        scale = absmax / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int32)
+        summed = schedules.all_reduce(q, axes, schedule, intra_axis)
+        return (summed.astype(jnp.float32) * scale).astype(x.dtype)
+
+    raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
+                     "expected None, 'bf16' or 'int8'")

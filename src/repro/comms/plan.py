@@ -1,0 +1,89 @@
+"""CommsPlan: one declarative object for how gradients cross the wire.
+
+Ties the subsystem together: a :class:`CommsPlan` names the schedule
+(``psum`` | ``ring`` | ``rsag`` | ``tree`` | ``hier`` | ``auto``), the wire
+dtype (fp32 / bf16 / int8) and the bucket size; :func:`sync_tree` executes
+it on a gradient pytree inside a shard_map body; :func:`resolve` turns
+``auto`` into a concrete schedule using the topology cost model, which is
+how the layout planner scores communication (paper §3.2/§4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from . import bucketer, compressed, schedules, topology as topo_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class CommsPlan:
+    """Declarative gradient-synchronization policy for one training cell."""
+
+    schedule: str = "auto"               # auto -> cost model picks
+    wire_dtype: Optional[str] = None     # None (fp32) | "bf16" | "int8"
+    bucket_bytes: int = bucketer.DEFAULT_BUCKET_BYTES
+    mean: bool = True                    # pmean (grads) vs psum semantics
+    intra_axis: str = "model"            # fast axis for "hier"
+
+    def resolve(self, mesh: Mesh, nbytes: int,
+                topo: Optional[topo_mod.Topology] = None) -> str:
+        """Concrete schedule for a message of ``nbytes`` on ``mesh``."""
+        if self.schedule != "auto":
+            return self.schedule
+        topo = topo or topo_mod.topology_from_mesh(
+            mesh, intra_axes=(self.intra_axis,))
+        return topo.best_schedule(min(nbytes, self.bucket_bytes))
+
+    def estimate_seconds(self, mesh: Mesh, nbytes: int,
+                         topo: Optional[topo_mod.Topology] = None) -> float:
+        """Cost-model seconds to sync ``nbytes`` of fp32 gradient.
+
+        Bucket count follows :func:`sync_tree` exactly — buckets are packed
+        from *uncompressed* fp32 bytes; the wire format only narrows what
+        each bucket's collective moves.
+        """
+        topo = topo or topo_mod.topology_from_mesh(
+            mesh, intra_axes=(self.intra_axis,))
+        sched = self.resolve(mesh, nbytes, topo)
+        n_buckets = max(1, -(-int(nbytes) // self.bucket_bytes))
+        per_bucket_wire = (nbytes / n_buckets
+                           * compressed.WIRE_RATIO.get(self.wire_dtype, 1.0))
+        return n_buckets * topo.allreduce_time(per_bucket_wire, sched)
+
+
+def group_size(mesh_shape, axes: Sequence[str]) -> int:
+    n = 1
+    for ax in axes:
+        n *= dict(mesh_shape)[ax]
+    return n
+
+
+def sync_tree(grads, plan: CommsPlan, mesh: Mesh,
+              axes: Tuple[str, ...]):
+    """Synchronize a gradient pytree over ``axes`` — inside shard_map.
+
+    bucket -> (compress ->) schedule-reduce per bucket -> unbucket.  With
+    ``plan.mean`` the result is the group mean (pmean semantics, what DP
+    gradient sync wants); otherwise the sum.
+    """
+    axes = tuple(axes)
+    if not axes:
+        return grads
+    sched = plan.resolve(
+        mesh, sum(4 * leaf.size for leaf in jax.tree.leaves(grads)))
+    bplan = bucketer.plan_buckets(grads, plan.bucket_bytes)
+    buckets = bucketer.flatten_buckets(bplan, grads)
+    reduced = [
+        compressed.wire_all_reduce(b, axes, sched, plan.wire_dtype,
+                                   plan.intra_axis)
+        for b in buckets
+    ]
+    if plan.mean:
+        n = group_size(mesh.shape, axes)
+        reduced = [b / n for b in reduced]
+    return bucketer.unflatten_buckets(bplan, reduced)

@@ -1,0 +1,194 @@
+"""Explicit all-reduce schedules as shard_map-local collectives.
+
+GSPMD leaves every collective implicit; dMath's scaling comes from choosing
+the *right* schedule per message (ring for bandwidth, tree for latency,
+two-level hierarchical for multi-node hybrid parallelism — paper §4).  Each
+function here operates on the *local* block inside a ``shard_map`` body and
+reduces over one or two named mesh axes:
+
+- :func:`ring_all_reduce`        — chunked ring: reduce-scatter then
+  all-gather via ``ppermute``, 2(n-1) steps, bandwidth-optimal.
+- :func:`reduce_scatter_all_gather` — the same dataflow expressed with
+  ``psum_scatter`` + ``all_gather`` (XLA picks the wire pattern).
+- :func:`tree_all_reduce`        — recursive doubling, log2(n) steps,
+  latency-optimal for small buffers (falls back to psum when the group
+  size is not a power of two).
+- :func:`hierarchical_all_reduce` — dMath's hybrid: reduce-scatter on the
+  fast intranode axis, all-reduce the 1/n_intra slice on the slow
+  internode axis, all-gather intranode.
+
+All schedules are numerically a sum over the group (== ``jax.lax.psum``)
+up to reduction-order rounding; ``tests/test_comms.py`` pins each one
+against psum within dtype tolerance.
+
+``ring`` and ``tree`` use ``ppermute``/``axis_index`` and therefore need
+the reduce axes to be *fully manual* in the surrounding shard_map (the SPMD
+partitioner cannot place partition-id under partially-auto meshes);
+``rsag``/``hier``/``psum`` are psum-family and work everywhere.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: schedules safe when some mesh axes stay auto (GSPMD) in the shard_map.
+PSUM_FAMILY = ("psum", "rsag", "hier")
+
+
+def _flatten_chunks(x: jax.Array, n: int) -> Tuple[jax.Array, int]:
+    """Local block as (n, chunk) with zero padding; returns (buf, orig_size)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(n, -1), x.size
+
+
+def _unflatten(buf: jax.Array, size: int, shape) -> jax.Array:
+    flat = buf.reshape(-1)
+    if flat.size != size:
+        flat = flat[:size]
+    return flat.reshape(shape)
+
+
+def ring_all_reduce(x: jax.Array, axis: str, axis_size: int) -> jax.Array:
+    """Chunked ring all-reduce over ``axis`` (reduce-scatter + all-gather).
+
+    Each device cycles its n chunks around the ring twice: n-1 accumulate
+    steps (after which device i owns the fully-reduced chunk (i+1) mod n)
+    and n-1 gather steps.  Every step moves 1/n of the buffer, so the total
+    wire per device is 2(n-1)/n — the bandwidth-optimal schedule dMath uses
+    for large gradients.
+    """
+    n = axis_size
+    if n <= 1:
+        return x
+    buf, size = _flatten_chunks(x, n)
+    idx = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    # reduce-scatter: at step s device i sends its running sum of chunk
+    # (i - s) and folds the incoming chunk (i - s - 1) into its buffer.
+    for s in range(n - 1):
+        send = jnp.take(buf, (idx - s) % n, axis=0)
+        recv = jax.lax.ppermute(send, axis, perm)
+        buf = buf.at[(idx - s - 1) % n].add(recv)
+    # all-gather: circulate the reduced chunks (device i starts owning
+    # chunk (i + 1) mod n).
+    for s in range(n - 1):
+        send = jnp.take(buf, (idx + 1 - s) % n, axis=0)
+        recv = jax.lax.ppermute(send, axis, perm)
+        buf = buf.at[(idx - s) % n].set(recv)
+    return _unflatten(buf, size, x.shape)
+
+
+def reduce_scatter_all_gather(x: jax.Array, axis: str) -> jax.Array:
+    """All-reduce as tiled ``psum_scatter`` + ``all_gather`` over ``axis``.
+
+    Same dataflow as the ring but with the per-step permutation left to
+    XLA; this is the schedule GSPMD itself lowers large all-reduces to.
+    """
+    # psum_scatter needs the leading dim divisible by the group size; pad.
+    size = x.size
+    flat = x.reshape(-1)
+    axis_size = _static_axis_size(axis)
+    pad = (-size) % axis_size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    part = jax.lax.psum_scatter(flat, axis, scatter_dimension=0, tiled=True)
+    out = jax.lax.all_gather(part, axis, axis=0, tiled=True)
+    return _unflatten(out, size, x.shape)
+
+
+def tree_all_reduce(x: jax.Array, axis: str, axis_size: int) -> jax.Array:
+    """Recursive-doubling all-reduce: log2(n) full-buffer exchanges.
+
+    Latency-optimal for small messages (log n alpha terms vs the ring's
+    2(n-1)).  Requires a power-of-two group; other sizes fall back to psum
+    (documented in the cost model, which prices tree at log2(n) steps).
+    """
+    n = axis_size
+    if n <= 1:
+        return x
+    if n & (n - 1):
+        return jax.lax.psum(x, axis)
+    d = 1
+    while d < n:
+        perm = [(i, i ^ d) for i in range(n)]
+        x = x + jax.lax.ppermute(x, axis, perm)
+        d *= 2
+    return x
+
+
+def hierarchical_all_reduce(x: jax.Array, intra_axis: str, inter_axis: str,
+                            intra_size: int) -> jax.Array:
+    """Two-level all-reduce: intranode first, then internode (paper §4).
+
+    reduce-scatter over the fast ``intra_axis`` leaves each device a
+    1/n_intra slice of the node-local sum; only that slice crosses the slow
+    ``inter_axis`` link; an intranode all-gather rebuilds the full buffer.
+    Internode wire per device drops by n_intra vs a flat schedule — the
+    reason dMath's hybrid parallelism scales past one node.
+    """
+    size = x.size
+    flat = x.reshape(-1)
+    pad = (-size) % intra_size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    part = jax.lax.psum_scatter(flat, intra_axis, scatter_dimension=0,
+                                tiled=True)
+    part = jax.lax.psum(part, inter_axis)
+    out = jax.lax.all_gather(part, intra_axis, axis=0, tiled=True)
+    return _unflatten(out, size, x.shape)
+
+
+def _static_axis_size(axis) -> int:
+    """Static size of a bound mesh axis (inside shard_map/pmap)."""
+    from jax._src import core as _core
+    env = _core.get_axis_env()
+    if isinstance(axis, (tuple, list)):
+        return math.prod(_static_axis_size(a) for a in axis)
+    try:
+        return env.axis_size(axis)
+    except AttributeError:  # very old/new envs: fall back to sizes dict
+        return dict(getattr(env, "axis_sizes", {}))[axis]
+
+
+def all_reduce(x: jax.Array, axes: Sequence[str], schedule: str = "psum",
+               intra_axis: str = "model") -> jax.Array:
+    """Dispatch one local all-reduce over ``axes`` by schedule name.
+
+    Multi-axis groups reduce sequentially per axis (sum is associative)
+    except ``hier``, which consumes exactly two axes at once: the fast
+    ``intra_axis`` and the remaining slow one.
+    """
+    axes = tuple(axes)
+    if not axes:
+        return x
+    if schedule == "psum":
+        return jax.lax.psum(x, axes)
+    if schedule == "hier":
+        if len(axes) == 1:
+            # one level only: degenerate to rsag on that axis
+            return reduce_scatter_all_gather(x, axes[0])
+        intra = intra_axis if intra_axis in axes else axes[-1]
+        inters = tuple(a for a in axes if a != intra)
+        inter = inters[0]
+        for extra in inters[1:]:          # >2 axes: fold extras with psum
+            x = jax.lax.psum(x, extra)
+        return hierarchical_all_reduce(
+            x, intra, inter, _static_axis_size(intra))
+    for ax in axes:
+        n = _static_axis_size(ax)
+        if schedule == "ring":
+            x = ring_all_reduce(x, ax, n)
+        elif schedule == "rsag":
+            x = reduce_scatter_all_gather(x, ax)
+        elif schedule == "tree":
+            x = tree_all_reduce(x, ax, n)
+        else:
+            raise ValueError(f"unknown schedule {schedule!r}")
+    return x

@@ -1,0 +1,161 @@
+"""Two-level device topology + alpha-beta collective cost model.
+
+dMath's clusters are two-level: GPUs inside a node talk over PCIe /
+GPUDirect P2P (fast, low latency), nodes talk over 56 Gb/s FDR InfiniBand
+(slower; the companion library paper arXiv 1604.01416 details the MPI /
+GPUDirect layer).  On a named JAX mesh the same structure appears as a fast
+*intranode* axis group and a slow *internode* axis group — by repo
+convention ``"model"`` is placed intranode (tensor-parallel traffic is the
+most latency-sensitive) and ``"data"``/``"pod"`` span nodes.
+
+:class:`Topology` captures the split plus per-level link parameters and
+prices each all-reduce schedule with the classic alpha-beta model
+
+    T(schedule) = steps * alpha + wire_bytes / bandwidth
+
+so the planner can *choose* a schedule from message size and mesh shape
+instead of hardcoding one (paper §3.2: "the shape of the data and the
+concurrency can affect the performance").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+from jax.sharding import Mesh
+
+#: schedules the subsystem implements (see :mod:`repro.comms.schedules`).
+SCHEDULES = ("psum", "ring", "rsag", "tree", "hier")
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One interconnect level: per-message latency and per-device bandwidth."""
+
+    latency_s: float
+    bandwidth_Bps: float
+
+
+# Defaults sized to the paper's hardware generation; they only need to be
+# *relatively* right (intranode faster than internode) for schedule choice.
+PCIE_GEN3 = LinkSpec(latency_s=2e-6, bandwidth_Bps=12e9)    # GPUDirect P2P
+FDR_IB = LinkSpec(latency_s=5e-6, bandwidth_Bps=6.8e9)      # 56 Gb/s FDR
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Fast intranode axes x slow internode axes, with link parameters."""
+
+    intra_axes: Tuple[str, ...]
+    inter_axes: Tuple[str, ...]
+    axis_sizes: Dict[str, int]
+    intra: LinkSpec = PCIE_GEN3
+    inter: LinkSpec = FDR_IB
+
+    # -- geometry -----------------------------------------------------------
+    @property
+    def intra_size(self) -> int:
+        return math.prod(self.axis_sizes[a] for a in self.intra_axes) or 1
+
+    @property
+    def inter_size(self) -> int:
+        return math.prod(self.axis_sizes[a] for a in self.inter_axes) or 1
+
+    @property
+    def world_size(self) -> int:
+        return self.intra_size * self.inter_size
+
+    def level_of(self, axis: str) -> LinkSpec:
+        return self.intra if axis in self.intra_axes else self.inter
+
+    # -- alpha-beta cost model ---------------------------------------------
+    def _flat_allreduce(self, nbytes: int, n: int, link: LinkSpec,
+                        steps: int, wire: float) -> float:
+        del n
+        return steps * link.latency_s + wire / link.bandwidth_Bps
+
+    def allreduce_time(self, nbytes: int, schedule: str,
+                       n: Optional[int] = None) -> float:
+        """Estimated seconds for one all-reduce of ``nbytes`` per device.
+
+        Flat schedules (``psum``/``ring``/``rsag``/``tree``) are priced on
+        the *slowest* link they cross (the internode one whenever the group
+        spans nodes); ``hier`` decomposes into intranode reduce-scatter +
+        internode all-reduce of a 1/n_intra slice + intranode all-gather.
+        """
+        n = n or self.world_size
+        if n <= 1:
+            return 0.0
+        link = self.inter if self.inter_size > 1 else self.intra
+        if schedule in ("psum", "ring", "rsag"):
+            # bandwidth-optimal: 2(n-1)/n of the buffer crosses the wire
+            wire = 2.0 * nbytes * (n - 1) / n
+            return self._flat_allreduce(nbytes, n, link, 2 * (n - 1), wire)
+        if schedule == "tree":
+            # recursive doubling: log2(n) full-buffer exchanges
+            steps = max(1, math.ceil(math.log2(n)))
+            return self._flat_allreduce(nbytes, n, link, steps,
+                                        nbytes * steps)
+        if schedule == "hier":
+            # clamp the two levels to the group actually reducing (n may
+            # name a sub-mesh group smaller than the full topology)
+            ni = min(self.intra_size, n)
+            nn = max(1, n // ni)
+            if ni <= 1 or nn <= 1:
+                # degenerate: one level only -> same as ring on that level
+                return self.allreduce_time(nbytes, "ring", n)
+            t = 0.0
+            # intranode reduce-scatter + all-gather, each (ni-1)/ni
+            t += 2 * ((ni - 1) * self.intra.latency_s
+                      + nbytes * (ni - 1) / ni / self.intra.bandwidth_Bps)
+            # internode all-reduce over the 1/ni slice
+            slice_bytes = nbytes / ni
+            t += (2 * (nn - 1) * self.inter.latency_s
+                  + 2.0 * slice_bytes * (nn - 1) / nn
+                  / self.inter.bandwidth_Bps)
+            return t
+        raise ValueError(f"unknown schedule {schedule!r}; "
+                         f"expected one of {SCHEDULES}")
+
+    def usable_schedules(self, candidates: Sequence[str] = SCHEDULES
+                         ) -> Tuple[str, ...]:
+        """Candidates applicable here (``hier`` needs both levels > 1)."""
+        return tuple(s for s in candidates if s != "hier"
+                     or (self.intra_size > 1 and self.inter_size > 1))
+
+    def schedule_scores(self, nbytes: int,
+                        candidates: Sequence[str] = SCHEDULES
+                        ) -> Dict[str, float]:
+        """Cost-model seconds per usable schedule for one all-reduce."""
+        return {s: self.allreduce_time(nbytes, s)
+                for s in self.usable_schedules(candidates)}
+
+    def best_schedule(self, nbytes: int,
+                      candidates: Sequence[str] = SCHEDULES) -> str:
+        """argmin over the cost model — latency-bound sizes pick ``tree``,
+        bandwidth-bound sizes pick ``ring``/``rsag``, multi-node meshes with
+        a real intranode axis pick ``hier``."""
+        scores = self.schedule_scores(nbytes, candidates)
+        return min(scores, key=scores.get)
+
+
+def topology_from_mesh(mesh: Mesh,
+                       intra_axes: Optional[Sequence[str]] = None,
+                       intra: LinkSpec = PCIE_GEN3,
+                       inter: LinkSpec = FDR_IB) -> Topology:
+    """Derive the two-level topology from a named mesh.
+
+    Default split follows repo convention: ``"model"`` (tensor parallel) is
+    the intranode axis, every other axis (``"data"``, ``"pod"``) spans
+    nodes.  Axes absent from the mesh are ignored.
+    """
+    names = tuple(mesh.shape.keys())
+    if intra_axes is None:
+        intra_axes = tuple(a for a in names if a == "model")
+    else:
+        intra_axes = tuple(a for a in intra_axes if a in names)
+    inter_axes = tuple(a for a in names if a not in intra_axes)
+    return Topology(intra_axes=intra_axes, inter_axes=inter_axes,
+                    axis_sizes=dict(mesh.shape), intra=intra, inter=inter)

@@ -1,0 +1,131 @@
+"""JAX version-compatibility shims.
+
+The codebase is written against the current JAX API surface:
+
+- ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+- ``jax.sharding.AxisType`` and ``jax.make_mesh(..., axis_types=...)``
+- ``jax.experimental.pallas.tpu.CompilerParams``
+
+Older runtimes (the 0.4.x CPU wheels used in CI) predate those names:
+``shard_map`` lives in ``jax.experimental.shard_map`` and spells the
+replication check ``check_rep``, meshes have no axis types, and the pallas
+params class is ``TPUCompilerParams``.  :func:`install` backfills every
+missing name *additively* — each patch applies only when the attribute is
+absent, so on a current JAX the whole call is a no-op.  It is invoked from
+``repro/__init__.py`` and is idempotent.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+_INSTALLED = False
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` (all axes behave as Auto on
+    runtimes that predate explicit sharding-in-types)."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _shard_map_shim():
+    from jax.experimental.shard_map import shard_map as _sm
+
+    @functools.wraps(_sm)
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None, *,
+                  check_vma=None, check_rep=None, **kw):
+        if check_rep is None:
+            check_rep = bool(check_vma) if check_vma is not None else True
+
+        mapped = _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_rep, **kw)
+        axis_names = frozenset(getattr(mesh, "axis_names", ()) or ())
+
+        @functools.wraps(f)
+        def call(*args):
+            # Nested shard_map over an already fully-manual mesh: the args
+            # are this device's local blocks, so run the body inline (the
+            # collectives it issues still resolve — the axes are bound).
+            # This is what lets model code with internal explicit-collective
+            # shard_maps run under the comms subsystem's outer shard_map;
+            # it is only reachable from data-parallel cells where every
+            # non-batch axis has size 1 (enforced in train/step.py).
+            if (not kw.get("auto") and axis_names
+                    and axis_names <= bound_axis_names()):
+                return f(*args)
+            return mapped(*args)
+
+        return call
+
+    return shard_map
+
+
+def _make_mesh_shim(real_make_mesh):
+    sig = inspect.signature(real_make_mesh)
+    if "axis_types" in sig.parameters:
+        return real_make_mesh
+
+    @functools.wraps(real_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+        del axis_types  # no explicit-sharding support: every axis is Auto
+        return real_make_mesh(axis_shapes, axis_names, **kw)
+
+    return make_mesh
+
+
+def bound_axis_names() -> frozenset:
+    """Mesh axis names currently bound as *manual* (inside shard_map/pmap).
+
+    Empty outside any manual-collective context.  Used by
+    :func:`repro.core.layout.constrain` to drop sharding constraints over
+    manual axes — inside a shard_map body values are local, so a constraint
+    naming a manual axis is meaningless (and rejected by the partitioner).
+    """
+    try:
+        from jax._src import core as _core
+        env = _core.get_axis_env()
+        sizes = getattr(env, "axis_sizes", None)
+        if sizes is not None:
+            return frozenset(sizes)
+        names = getattr(env, "axis_names", None)
+        if callable(names):
+            return frozenset(names())
+    except Exception:
+        pass
+    return frozenset()
+
+
+def install() -> None:
+    global _INSTALLED
+    if _INSTALLED:
+        return
+    _INSTALLED = True
+
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map_shim()
+
+    if not hasattr(jax, "set_mesh"):
+        # Mesh is itself a context manager on old runtimes, and entering it
+        # provides the ambient mesh that bare-PartitionSpec constraints use.
+        jax.set_mesh = lambda mesh: mesh
+
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+
+    jax.make_mesh = _make_mesh_shim(jax.make_mesh)
+
+    try:
+        import jax.experimental.pallas.tpu as pltpu
+
+        if not hasattr(pltpu, "CompilerParams") and hasattr(
+                pltpu, "TPUCompilerParams"):
+            pltpu.CompilerParams = pltpu.TPUCompilerParams
+    except ImportError:  # pallas not shipped in this build
+        pass

@@ -15,7 +15,8 @@ from . import autotune, gemm, memory, opcache, planner, precision, primitives, r
 from .dtensor import DistTensor, REGISTRY, TensorRegistry
 from .layout import Layout, best_divisor_axis, constrain
 from .opcache import GLOBAL_CACHE, OpCache
-from .planner import ParallelPlan, plan_for
+from .planner import (ParallelPlan, approx_param_count, comms_plan_for,
+                      grad_sync_topology, plan_for, score_comms_schedules)
 from .precision import FULL, HALF_STORAGE, MIXED, Policy
 from .redistribute import relayout, relayout_explicit, replicate
 from .replication import gathered, replicate_now, use_layout_of, zero_layout, zero_layout_tree
@@ -24,7 +25,8 @@ __all__ = [
     "Layout", "constrain", "best_divisor_axis",
     "DistTensor", "REGISTRY", "TensorRegistry",
     "relayout", "relayout_explicit", "replicate",
-    "ParallelPlan", "plan_for",
+    "ParallelPlan", "plan_for", "comms_plan_for", "score_comms_schedules",
+    "grad_sync_topology", "approx_param_count",
     "Policy", "FULL", "MIXED", "HALF_STORAGE",
     "OpCache", "GLOBAL_CACHE",
     "zero_layout", "zero_layout_tree", "gathered", "replicate_now",

@@ -189,7 +189,22 @@ def constrain(x: jax.Array, layout: Layout, mesh: Optional[Mesh] = None):
     """``with_sharding_constraint`` via a Layout.
 
     Inside ``jit`` under a mesh context the mesh argument may be omitted.
+
+    Inside a ``shard_map`` body the constraint is rewritten for the manual
+    context: axes the shard_map holds manually are dropped (the value is
+    already local over them — the global annotation is meaningless there,
+    and the SPMD partitioner rejects it), and if nothing remains the call
+    is a no-op.  This is what lets model code that annotates layouts run
+    unchanged under the explicit comms schedules in :mod:`repro.comms`.
     """
+    from repro.compat import bound_axis_names
+
+    manual = bound_axis_names()
+    if manual:
+        for name in set(layout.mesh_axes_used()) & manual:
+            layout = layout.drop_axis(name)
+        if layout.is_replicated():
+            return x
     if mesh is not None:
         return jax.lax.with_sharding_constraint(x, layout.sharding(mesh))
     return jax.lax.with_sharding_constraint(x, layout.spec)

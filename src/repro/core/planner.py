@@ -49,6 +49,7 @@ class ParallelPlan:
     fsdp_axis: str = "data"
     n_layers: int = 1                   # for per-tensor FSDP sizing
     fsdp_tensor_bytes: float = 4 * GiB  # FSDP only stacks bigger than this
+    comms: Optional[object] = None      # repro.comms.CommsPlan (grad sync)
 
     # ---- parameter layouts --------------------------------------------------
     def _maybe_fsdp(self, layout: Layout, shape, mesh: Mesh, dim: int) -> Layout:
@@ -170,6 +171,74 @@ class ParallelPlan:
         return Layout((None, b_ax, self.tp_axis, None, None))
 
 
+def approx_param_count(cfg) -> int:
+    """Rough parameter count from the config — feeds the comms cost model.
+
+    Only needs to land within ~2x for schedule choice (the alpha-beta
+    crossover points are decades apart in message size).
+    """
+    D = getattr(cfg, "d_model", 0) or 0
+    V = getattr(cfg, "vocab_size", 0) or 0
+    L = max(1, getattr(cfg, "n_layers", 1) or 1)
+    H = getattr(cfg, "n_heads", 0) or 0
+    Hkv = getattr(cfg, "n_kv_heads", 0) or H
+    hd = getattr(cfg, "head_dim", 0) or 0
+    F = getattr(cfg, "d_ff", 0) or 0
+    E = getattr(cfg, "n_experts", 0) or 1
+    attn = D * (H + 2 * Hkv) * hd + H * hd * D
+    ffn = 3 * D * F * E
+    return 2 * V * D + L * (attn + ffn)
+
+
+def grad_sync_topology(mesh: Mesh):
+    """Two-level topology of the *gradient-sync group* (the batch axes).
+
+    Gradients reduce over ("pod", "data") only; "model" never joins the
+    group.  Within that group "data" is the fast level (chips inside a
+    pod) and "pod" the slow one — so multi-pod meshes get a meaningful
+    hierarchical schedule for DP sync.
+    """
+    from repro.comms import topology as topo_mod
+
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return topo_mod.Topology(
+        intra_axes=tuple(a for a in batch_axes if a == "data"),
+        inter_axes=tuple(a for a in batch_axes if a != "data"),
+        axis_sizes={a: mesh.shape[a] for a in batch_axes})
+
+
+def score_comms_schedules(nbytes: int, mesh: Mesh, topo=None) -> dict:
+    """Cost-model seconds per all-reduce schedule for one ``nbytes`` sync.
+
+    The planner's communication score: plans are compared on (and
+    schedules chosen by) these estimates — paper §3.2, "the shape of the
+    data and the concurrency can affect the performance".
+    """
+    topo = topo or grad_sync_topology(mesh)
+    return topo.schedule_scores(nbytes)
+
+
+def comms_plan_for(cfg, mesh: Mesh, *, wire_dtype: Optional[str] = None,
+                   bucket_bytes: Optional[int] = None, topo=None):
+    """Pick the gradient-sync :class:`repro.comms.CommsPlan` for a cell.
+
+    The schedule is the cost-model argmin at the bucket message size (grad
+    buckets are what actually cross the wire, not the whole grad tree),
+    scored over the batch-axes group only.
+    """
+    from repro.comms import bucketer
+    from repro.comms.plan import CommsPlan
+
+    topo = topo or grad_sync_topology(mesh)
+    bucket_bytes = bucket_bytes or bucketer.DEFAULT_BUCKET_BYTES
+    grad_bytes = 4 * approx_param_count(cfg)
+    msg = min(grad_bytes, bucket_bytes) or bucket_bytes
+    scores = score_comms_schedules(msg, mesh, topo)
+    schedule = min(scores, key=scores.get)
+    return CommsPlan(schedule=schedule, wire_dtype=wire_dtype,
+                     bucket_bytes=bucket_bytes, intra_axis="data")
+
+
 def plan_for(cfg, mesh: Mesh, *, fsdp_tensor_bytes: float = 4 * GiB,
              seq_parallel_residual: Optional[bool] = None) -> ParallelPlan:
     """Build the plan for a model config on a mesh (the planner proper)."""
@@ -217,4 +286,5 @@ def plan_for(cfg, mesh: Mesh, *, fsdp_tensor_bytes: float = 4 * GiB,
         ffn_replicated=ffn_replicated,
         n_layers=max(1, getattr(cfg, "n_layers", 1)),
         fsdp_tensor_bytes=fsdp_tensor_bytes,
+        comms=comms_plan_for(cfg, mesh),
     )

@@ -215,6 +215,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax returns [dict]
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     colls = parse_collectives(hlo)
     if hlo_out:

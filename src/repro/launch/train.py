@@ -63,15 +63,28 @@ def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
         scale_down: int = 64, lr: float = 3e-3, microbatches: int = 1,
         ckpt_dir: Optional[str] = None, ckpt_every: int = 25,
         resume: bool = False, mesh=None, log_every: int = 10,
-        seed: int = 0):
+        seed: int = 0, comms: str = "auto"):
     cfg = scale_config(get_config(arch), scale_down)
     mesh = mesh or mesh_mod.make_host_mesh()
     plan = plan_for(cfg, mesh)
     model = Model(cfg, mesh, plan, q_chunk=64, kv_chunk=128, ssd_chunk=32)
 
+    # Route gradient sync through the planner's cost-model-chosen
+    # repro.comms schedule when the cell is pure-DP (the explicit path's
+    # domain); TP/hybrid cells keep GSPMD's implicit collectives.
+    comms_plan = None
+    if comms != "off":
+        dp_only = all(n == 1 for a, n in mesh.shape.items()
+                      if a not in plan.batch_axes)
+        if dp_only:
+            comms_plan = plan.comms
+            print(f"comms: grad sync via {comms_plan.schedule} schedule "
+                  f"(bucket {comms_plan.bucket_bytes >> 20} MiB)")
+
     adamw = AdamWConfig(lr=warmup_cosine(lr, steps // 10 + 1, steps))
     train_step = build_train_step(model, mesh, adamw,
-                                  num_microbatches=microbatches)
+                                  num_microbatches=microbatches,
+                                  comms=comms_plan)
     st_sh = {"params": model.param_shardings(),
              "opt": state_shardings(model, mesh)["opt"]}
 
@@ -142,11 +155,13 @@ def main():
     ap.add_argument("--ckpt-dir", type=str, default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--comms", choices=["auto", "off"], default="auto",
+                    help="route DP grad sync through repro.comms schedules")
     args = ap.parse_args()
     losses = run(args.arch, steps=args.steps, batch=args.batch,
                  seq=args.seq, scale_down=args.scale_down, lr=args.lr,
                  microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
-                 resume=args.resume, seed=args.seed)
+                 resume=args.resume, seed=args.seed, comms=args.comms)
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
 
 

@@ -68,6 +68,7 @@ def build_train_step(
     mesh,
     adamw: Optional[opt.AdamWConfig] = None,
     num_microbatches: int = 1,
+    comms=None,
 ) -> Callable:
     """Returns train_step(state_dict, batch) -> (state_dict, metrics).
 
@@ -75,7 +76,16 @@ def build_train_step(
     accumulators in param layout (ZeRO-2 cadence: each microbatch's psum
     over the batch axes is emitted by GSPMD; the accumulator stays sharded
     wherever the params are).
+
+    ``comms`` (a :class:`repro.comms.CommsPlan`) switches gradient
+    synchronization from GSPMD's implicit psum to the explicit schedules in
+    :mod:`repro.comms` — bucketed, optionally compressed, ring/tree/
+    hierarchical all-reduces over the batch axes.  See
+    :func:`build_comms_train_step` for the restrictions.
     """
+    if comms is not None:
+        return build_comms_train_step(model, mesh, adamw, num_microbatches,
+                                      comms)
     adamw = adamw or opt.AdamWConfig()
     pspecs = model.param_specs()
     from repro.core.layout import constrain
@@ -118,6 +128,90 @@ def build_train_step(
             loss = jnp.mean(losses)
             metrics = jax.tree.map(lambda x: jnp.mean(x), ms)
 
+        new_params, new_opt, stats = opt.apply(
+            adamw, state["opt"], grads, pspecs, mesh)
+        metrics = dict(metrics, **stats)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def build_comms_train_step(
+    model,
+    mesh,
+    adamw: Optional[opt.AdamWConfig] = None,
+    num_microbatches: int = 1,
+    comms=None,
+) -> Callable:
+    """Train step whose gradient sync runs through ``repro.comms``.
+
+    The loss/grad computation moves inside a fully-manual ``shard_map``
+    over the mesh: each device differentiates on its local batch shard and
+    the gradients cross the wire via the plan's schedule (bucketed into
+    ``comms.bucket_bytes`` buffers, optionally bf16/int8 compressed) —
+    dMath's explicit communication layer instead of GSPMD's implicit psum.
+    Model-internal layout constraints become no-ops under the manual mesh
+    (see :func:`repro.core.layout.constrain`).
+
+    Restriction: the explicit path is data-parallel — every non-batch mesh
+    axis must have size 1 (pure-DP cells; hybrid TP cells keep the GSPMD
+    path).  With grad accumulation the sync happens ONCE per step, after
+    the microbatch scan — the bucketing win the paper's layer pools buy.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comms import plan as comms_plan_mod
+
+    adamw = adamw or opt.AdamWConfig()
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    bad = {a: n for a, n in mesh.shape.items()
+           if a not in batch_axes and n > 1}
+    if bad:
+        raise ValueError(
+            "explicit comms gradient sync is data-parallel: non-batch mesh "
+            f"axes must have size 1, got {bad}; use the GSPMD path "
+            "(comms=None) for tensor-parallel cells")
+    pspecs = model.param_specs()
+
+    def loss_fn(params, mb):
+        return model.loss_fn(params, mb)
+
+    def local_step(params, batch):
+        if num_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, num_microbatches)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb_step(acc, mb):
+                (l, m), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g)
+                return acc, (l, m)
+
+            grads, (losses, ms) = jax.lax.scan(mb_step, acc0, mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(lambda x: jnp.mean(x), ms)
+        del loss                      # model metrics already carry it
+        # ONE bucketed/compressed sync per step over the whole grad tree
+        grads = comms_plan_mod.sync_tree(grads, comms, mesh, batch_axes)
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, batch_axes),
+                               metrics)
+        return grads, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        # specs are pytree prefixes: params/grads/metrics replicated, every
+        # batch leaf sharded on dim 0 over the batch axes
+        grads, metrics = jax.shard_map(
+            local_step, check_vma=False, mesh=mesh,
+            in_specs=(P(), P(batch_axes)),
+            out_specs=(P(), P()),
+        )(params, batch)
         new_params, new_opt, stats = opt.apply(
             adamw, state["opt"], grads, pspecs, mesh)
         metrics = dict(metrics, **stats)
