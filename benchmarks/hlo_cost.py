@@ -374,6 +374,36 @@ def allreduce_wire_bytes(nbytes: float, n: int, schedule: str,
     raise ValueError(f"unknown schedule {schedule!r}")
 
 
+def pipeline_bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    """GPipe/1F1B idle fraction (S-1)/(M+S-1).
+
+    Delegates to :mod:`repro.pipeline.costs` — the single source of truth
+    shared with the planner, so HLO accounting and plan scoring agree
+    (same contract :func:`allreduce_wire_bytes` keeps with repro.comms).
+    """
+    from repro.pipeline import costs
+    return costs.bubble_fraction(n_stages, n_microbatches)
+
+
+def pipeline_boundary_wire_bytes(act_bytes: float, n_stages: int,
+                                 n_microbatches: int,
+                                 backward: bool = True) -> float:
+    """Stage-boundary ppermute bytes per step (fwd + bwd cotangents)."""
+    from repro.pipeline import costs
+    return costs.boundary_wire_bytes(int(act_bytes), n_stages,
+                                     n_microbatches, backward=backward)
+
+
+def pipeline_step_seconds(compute_s: float, n_stages: int,
+                          n_microbatches: int, act_bytes: float,
+                          link) -> float:
+    """Alpha-beta pipelined-step estimate (bubble-stretched compute +
+    critical-path boundary transfers)."""
+    from repro.pipeline import costs
+    return costs.pipeline_step_seconds(compute_s, n_stages, n_microbatches,
+                                       int(act_bytes), link)
+
+
 def collective_seconds(cost: Cost, topology, n: Optional[int] = None) -> float:
     """Alpha-beta time estimate for a Cost's collectives on a topology.
 

@@ -6,6 +6,8 @@
   pipeline      §2.2: auto-tuned data pipeline
   compression   Table 1 CNTK column: 1-bit/int8 EF gradients (8 fake devices)
   collectives   repro.comms schedules: measured vs cost-model (8 fake devices)
+  pipeline_parallel  repro.pipeline: measured vs predicted bubble fraction
+                and stage-boundary bytes (8 fake devices)
   kernels       Pallas kernels (interpret) vs oracles
   roofline      §Roofline summary from the dry-run artifacts (if present)
 
@@ -22,6 +24,7 @@ import sys
 MULTIDEV = {"gemm": "benchmarks.gemm_layouts",
             "compression": "benchmarks.compression_bench",
             "collectives": "benchmarks.collectives_bench",
+            "pipeline_parallel": "benchmarks.pipeline_parallel_bench",
             "table1": "benchmarks.table1"}
 LOCAL = {"precision": "benchmarks.precision_bench",
          "pipeline": "benchmarks.pipeline_bench",

@@ -185,12 +185,15 @@ def plan_gemm(
     def add(alg, a_to, b_to, c_layout, extra=0):
         cost = (_est(a_shape, dtype, a_layout, a_to, mesh)
                 + _est(b_shape, dtype, b_layout, b_to, mesh) + extra)
+        relayouts = int(a_to is not None and a_to != a_layout) \
+            + int(b_to is not None and b_to != b_layout)
         if out_layout is not None and c_layout != out_layout:
             cost += _est((m, n), dtype, c_layout, out_layout, mesh)
+            relayouts += 1
             c_final = out_layout
         else:
             c_final = c_layout
-        cands.append(GemmPlan(alg, a_to, b_to, c_final, cost))
+        cands.append((relayouts, GemmPlan(alg, a_to, b_to, c_final, cost)))
 
     nmodel = mesh.shape.get(axis, 1)
     # row-parallel: A row-sharded, B replicated
@@ -217,8 +220,13 @@ def plan_gemm(
     # always-valid fallback: replicate everything
     add("local", rep, rep, rep)
 
-    cands.sort(key=lambda p: p.est_bytes)
-    return cands[0]
+    # cheapest wire first, with a 5% penalty per relayout: each relayout is
+    # an extra collective launch + fusion barrier the byte model does not
+    # see, so near-ties resolve toward the algorithm that consumes the
+    # operands in place (and exact ties toward fewer relayouts — the
+    # documented zero-relayout algorithm for already-compatible operands)
+    cands.sort(key=lambda rp: (rp[1].est_bytes * (1 + 0.05 * rp[0]), rp[0]))
+    return cands[0][1]
 
 
 _ALGOS = {

@@ -50,6 +50,7 @@ class ParallelPlan:
     n_layers: int = 1                   # for per-tensor FSDP sizing
     fsdp_tensor_bytes: float = 4 * GiB  # FSDP only stacks bigger than this
     comms: Optional[object] = None      # repro.comms.CommsPlan (grad sync)
+    pipeline: Optional[object] = None   # repro.pipeline.PipelineSpec (PP)
 
     # ---- parameter layouts --------------------------------------------------
     def _maybe_fsdp(self, layout: Layout, shape, mesh: Mesh, dim: int) -> Layout:
@@ -239,6 +240,111 @@ def comms_plan_for(cfg, mesh: Mesh, *, wire_dtype: Optional[str] = None,
                      bucket_bytes=bucket_bytes, intra_axis="data")
 
 
+def pipeline_spec_for(cfg, mesh: Mesh, *,
+                      num_microbatches: Optional[int] = None,
+                      schedule: str = "gpipe"):
+    """The :class:`repro.pipeline.PipelineSpec` for a cell, or None.
+
+    A spec exists iff the mesh has a ``pipe`` axis of size > 1.  Stage
+    boundaries are the uniform split (required by the stacked-parameter
+    executable path; for homogeneous layer stacks it is also what the
+    memory-balanced partitioner in ``repro.pipeline.partition`` returns).
+    Default microbatch count 2*pp keeps the GPipe/1F1B bubble under 1/3.
+    """
+    pp = mesh.shape.get("pipe", 1)
+    if pp <= 1:
+        return None
+    from repro.pipeline import PipelineSpec
+
+    L = max(1, getattr(cfg, "n_layers", 1) or 1)
+    if L % pp:
+        raise ValueError(
+            f"n_layers={L} not divisible by pipe axis size {pp}")
+    return PipelineSpec(
+        n_stages=pp, axis="pipe", schedule=schedule,
+        num_microbatches=num_microbatches or 2 * pp,
+        boundaries=tuple(range(0, L + 1, L // pp)))
+
+
+def score_hybrid_candidates(cfg, n_devices: int, *, global_batch: int,
+                            seq_len: int,
+                            num_microbatches: Optional[int] = None,
+                            intra=None, inter=None) -> dict:
+    """Cost-model seconds per (dp, tp, pp) factorization of ``n_devices``.
+
+    The planner's hybrid-parallelism score (paper §4: DP where activations
+    dominate, MP where parameters dominate, now with the inter-layer axis):
+
+    - compute: 6 * params * tokens FLOPs spread over all devices,
+    - TP: 4 residual-stream all-reduces per layer on the intranode link
+      (alpha-beta priced over the tp group),
+    - PP: the GPipe bubble stretches compute by 1/(1-bubble) and the
+      stage-boundary ppermutes pay the critical-path alpha-beta term on
+      the internode link (``repro.pipeline.costs``, the same formulas
+      ``benchmarks/hlo_cost.py`` exposes),
+    - DP: one bucketed gradient all-reduce of the 1/(tp*pp) grad shard,
+      best-schedule over the dp group (``comms/topology.py``).
+
+    Infeasible cells (head counts or layer counts that do not divide, a
+    batch smaller than dp) are omitted.
+    """
+    from repro.comms import topology as topo_mod
+    from repro.pipeline import costs as pipe_costs
+
+    intra = intra or topo_mod.PCIE_GEN3
+    inter = inter or topo_mod.FDR_IB
+    n_params = approx_param_count(cfg)
+    L = max(1, getattr(cfg, "n_layers", 1) or 1)
+    heads = getattr(cfg, "n_heads", 0) or 0
+    D = getattr(cfg, "d_model", 1) or 1
+    scores = {}
+    for dp in range(1, n_devices + 1):
+        if n_devices % dp or global_batch % dp:
+            continue
+        for tp in range(1, n_devices // dp + 1):
+            if (n_devices // dp) % tp:
+                continue
+            pp = n_devices // (dp * tp)
+            if L % pp:
+                continue
+            if tp > 1 and (heads == 0 or heads % tp):
+                continue
+            local_batch = global_batch // dp
+            M = num_microbatches or max(1, min(4 * pp, local_batch))
+            M = math.gcd(local_batch, M) or 1
+
+            t_comp = (6.0 * n_params * global_batch * seq_len
+                      / n_devices / pipe_costs.DEVICE_FLOPS)
+            t_tp = 0.0
+            if tp > 1:
+                ar_bytes = 2 * local_batch * seq_len * D    # bf16 stream
+                wire = 2.0 * ar_bytes * (tp - 1) / tp
+                t_tp = 4 * (L // pp) * (
+                    M * 2 * (tp - 1) * intra.latency_s
+                    + wire / intra.bandwidth_Bps)
+            act = pipe_costs.boundary_act_bytes(
+                max(1, local_batch // M), seq_len, D)
+            t_pipe = pipe_costs.pipeline_step_seconds(
+                t_comp + t_tp, pp, M, act, inter)
+            t_dp = 0.0
+            if dp > 1:
+                topo = topo_mod.Topology(
+                    intra_axes=(), inter_axes=("data",),
+                    axis_sizes={"data": dp}, intra=intra, inter=inter)
+                grad_bytes = int(4 * n_params / (tp * pp))
+                t_dp = min(topo.schedule_scores(grad_bytes).values())
+            scores[(dp, tp, pp)] = t_pipe + t_dp
+    return scores
+
+
+def best_hybrid(cfg, n_devices: int, **kwargs) -> Tuple[int, int, int]:
+    """argmin (dp, tp, pp) over :func:`score_hybrid_candidates`."""
+    scores = score_hybrid_candidates(cfg, n_devices, **kwargs)
+    if not scores:
+        raise ValueError(f"no feasible (dp, tp, pp) for {n_devices} devices")
+    return min(scores, key=scores.get)
+
+
 def plan_for(cfg, mesh: Mesh, *, fsdp_tensor_bytes: float = 4 * GiB,
              seq_parallel_residual: Optional[bool] = None) -> ParallelPlan:
     """Build the plan for a model config on a mesh (the planner proper)."""
@@ -287,4 +393,5 @@ def plan_for(cfg, mesh: Mesh, *, fsdp_tensor_bytes: float = 4 * GiB,
         n_layers=max(1, getattr(cfg, "n_layers", 1)),
         fsdp_tensor_bytes=fsdp_tensor_bytes,
         comms=comms_plan_for(cfg, mesh),
+        pipeline=pipeline_spec_for(cfg, mesh),
     )

@@ -152,14 +152,32 @@ def build_lowered(arch: str, shape_name: str, mesh, *,
         import math as _m
         nb = _m.prod(mesh.shape[a] for a in plan.batch_axes)
         nmb = max(1, min(nmb, shape.global_batch // nb))
-        ts = train_step_mod.build_train_step(model, mesh, adamw,
-                                             num_microbatches=nmb)
-        st_sds = train_step_mod.state_sds(model, mesh, adamw)
-        st_sh = train_step_mod.state_shardings(model, mesh, adamw)
+        if mesh.shape.get("pipe", 1) > 1:
+            # pipelined cell: microbatches split the LOCAL batch shard
+            import dataclasses as _dc
+
+            from repro import pipeline as pipe_mod
+
+            local_b = shape.global_batch // nb
+            nmb = max(1, min(nmb, local_b))
+            while local_b % nmb:
+                nmb -= 1
+            spec = _dc.replace(plan.pipeline, num_microbatches=nmb)
+            ts = train_step_mod.build_pipeline_train_step(
+                model, mesh, adamw, pipeline=spec)
+            st_sds = pipe_mod.pipeline_state_sds(model, mesh, spec, adamw)
+            st_sh = pipe_mod.pipeline_state_shardings(model, mesh, spec,
+                                                      adamw)
+        else:
+            ts = train_step_mod.build_train_step(model, mesh, adamw,
+                                                 num_microbatches=nmb)
+            st_sds = train_step_mod.state_sds(model, mesh, adamw)
+            st_sh = train_step_mod.state_shardings(model, mesh, adamw)
         f = jax.jit(ts, in_shardings=(st_sh, b_sh),
                     out_shardings=(st_sh, None), donate_argnums=(0,))
         lowered = f.lower(st_sds, b_sds)
-        meta = {"step": "train_step", "microbatches": nmb}
+        meta = {"step": "train_step", "microbatches": nmb,
+                "pp": mesh.shape.get("pipe", 1)}
 
     elif shape.kind == "prefill":
         p_sds = model.param_sds()
@@ -198,9 +216,9 @@ def build_lowered(arch: str, shape_name: str, mesh, *,
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              microbatches: Optional[int] = None, model_kwargs=None,
-             plan_kwargs=None, hlo_out: Optional[str] = None
-             ) -> Dict[str, Any]:
-    mesh = make_production_mesh(multi_pod=multi_pod)
+             plan_kwargs=None, hlo_out: Optional[str] = None,
+             pp: int = 1) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod, pp=pp)
     n_chips = 512 if multi_pod else 256
     with jax.set_mesh(mesh):
         t0 = time.time()
@@ -232,7 +250,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     result = {
         **meta,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": ("2x16x16" if multi_pod else "16x16")
+                + (f"_pp{pp}" if pp > 1 else ""),
         "n_chips": n_chips,
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_compile, 2),
@@ -263,6 +282,9 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages: carve a 'pipe' axis out of the "
+                         "pod (DP x PP cell; train shapes only)")
     ap.add_argument("--out", type=str, default="experiments/dryrun")
     ap.add_argument("--hlo-out", type=str, default=None)
     args = ap.parse_args()
@@ -280,12 +302,14 @@ def main():
     for arch, shape in todo:
         for mp in meshes:
             tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+            if args.pp > 1:
+                tag += f"_pp{args.pp}"
             try:
                 hlo_out = args.hlo_out or os.path.join(
                     args.out, tag + ".hlo.gz")
                 res = run_cell(arch, shape, multi_pod=mp,
                                microbatches=args.microbatches,
-                               hlo_out=hlo_out)
+                               hlo_out=hlo_out, pp=args.pp)
                 path = os.path.join(args.out, tag + ".json")
                 with open(path, "w") as f:
                     json.dump(res, f, indent=1)

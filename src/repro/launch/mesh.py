@@ -10,10 +10,25 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False, pp: int = 1):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods).
+
+    ``pp > 1`` carves a ``pipe`` axis out of the pod's chips.  The
+    explicit-pipeline train step is DP x PP (the pipe axis needs manual
+    ppermute placement), so the model axis collapses to 1 in that mode —
+    TP x PP composition stays at the planner's cost-model level.
+    """
+    if pp > 1:
+        chips = 256
+        if chips % pp:
+            raise ValueError(f"pp={pp} does not divide {chips} chips/pod")
+        shape = (2, chips // pp, pp, 1) if multi_pod \
+            else (chips // pp, pp, 1)
+        axes = ("pod", "data", "pipe", "model") if multi_pod \
+            else ("data", "pipe", "model")
+    else:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(
         shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
 
@@ -25,8 +40,13 @@ def make_mesh(shape, axes):
         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
 
 
-def make_host_mesh():
+def make_host_mesh(pp: int = 1):
     """Whatever devices exist, as (data=n, model=1) — the layouts always
-    name both axes (smoke tests, examples)."""
+    name both axes (smoke tests, examples).  ``pp > 1`` inserts a
+    ``pipe`` axis: (data=n/pp, pipe=pp, model=1)."""
     n = len(jax.devices())
+    if pp > 1:
+        if n % pp:
+            raise ValueError(f"pp={pp} does not divide {n} devices")
+        return make_mesh((n // pp, pp, 1), ("data", "pipe", "model"))
     return make_mesh((n, 1), ("data", "model"))

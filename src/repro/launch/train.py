@@ -63,30 +63,49 @@ def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
         scale_down: int = 64, lr: float = 3e-3, microbatches: int = 1,
         ckpt_dir: Optional[str] = None, ckpt_every: int = 25,
         resume: bool = False, mesh=None, log_every: int = 10,
-        seed: int = 0, comms: str = "auto"):
+        seed: int = 0, comms: str = "auto", pp: int = 1,
+        pp_schedule: str = "gpipe"):
     cfg = scale_config(get_config(arch), scale_down)
-    mesh = mesh or mesh_mod.make_host_mesh()
+    mesh = mesh or mesh_mod.make_host_mesh(pp)
     plan = plan_for(cfg, mesh)
     model = Model(cfg, mesh, plan, q_chunk=64, kv_chunk=128, ssd_chunk=32)
+    pipelined = mesh.shape.get("pipe", 1) > 1
 
     # Route gradient sync through the planner's cost-model-chosen
-    # repro.comms schedule when the cell is pure-DP (the explicit path's
-    # domain); TP/hybrid cells keep GSPMD's implicit collectives.
+    # repro.comms schedule when the cell is pure-DP (possibly x PP — the
+    # explicit paths' domain); TP/hybrid cells keep GSPMD's implicit
+    # collectives.
     comms_plan = None
     if comms != "off":
         dp_only = all(n == 1 for a, n in mesh.shape.items()
-                      if a not in plan.batch_axes)
+                      if a not in plan.batch_axes + ("pipe",))
         if dp_only:
             comms_plan = plan.comms
             print(f"comms: grad sync via {comms_plan.schedule} schedule "
                   f"(bucket {comms_plan.bucket_bytes >> 20} MiB)")
 
     adamw = AdamWConfig(lr=warmup_cosine(lr, steps // 10 + 1, steps))
-    train_step = build_train_step(model, mesh, adamw,
-                                  num_microbatches=microbatches,
-                                  comms=comms_plan)
-    st_sh = {"params": model.param_shardings(),
-             "opt": state_shardings(model, mesh)["opt"]}
+    if pipelined:
+        from repro.pipeline import pipeline_state_shardings
+        from repro.train import build_pipeline_train_step
+
+        spec = dataclasses.replace(
+            plan.pipeline, schedule=pp_schedule,
+            num_microbatches=max(1, microbatches))
+        print(f"pipeline: {spec.n_stages} stages ({spec.schedule}), "
+              f"{spec.num_microbatches} microbatches, "
+              f"bubble {spec.bubble_fraction():.2f}")
+        train_step = build_pipeline_train_step(model, mesh, adamw,
+                                               pipeline=spec,
+                                               comms=comms_plan)
+        st_sh = pipeline_state_shardings(model, mesh, spec, adamw)
+    else:
+        spec = None
+        train_step = build_train_step(model, mesh, adamw,
+                                      num_microbatches=microbatches,
+                                      comms=comms_plan)
+        st_sh = {"params": model.param_shardings(),
+                 "opt": state_shardings(model, mesh)["opt"]}
 
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
     start_step = 0
@@ -95,6 +114,10 @@ def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
             state = mgr.restore(shardings=st_sh)
             start_step = int(jax.device_get(state["opt"]["step"]))
             print(f"resumed from step {start_step}")
+        elif pipelined:
+            from repro.pipeline import pipeline_init_state
+            state = pipeline_init_state(model, mesh, spec,
+                                        jax.random.PRNGKey(seed))
         else:
             state = dataclasses.asdict(init_state(model, mesh,
                                                   jax.random.PRNGKey(seed)))
@@ -157,11 +180,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--comms", choices=["auto", "off"], default="auto",
                     help="route DP grad sync through repro.comms schedules")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline-parallel degree (adds a 'pipe' mesh axis)")
+    ap.add_argument("--pp-schedule", choices=["gpipe", "1f1b"],
+                    default="gpipe")
     args = ap.parse_args()
     losses = run(args.arch, steps=args.steps, batch=args.batch,
                  seq=args.seq, scale_down=args.scale_down, lr=args.lr,
                  microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
-                 resume=args.resume, seed=args.seed, comms=args.comms)
+                 resume=args.resume, seed=args.seed, comms=args.comms,
+                 pp=args.pp, pp_schedule=args.pp_schedule)
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
 
 

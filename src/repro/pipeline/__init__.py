@@ -1,0 +1,42 @@
+"""repro.pipeline — inter-layer pipeline parallelism (the third hybrid axis).
+
+dMath's headline claim is leading scaling under "intranode, internode and
+hybrid parallelism"; with ``repro.comms`` supplying the explicit collective
+layer, this package supplies the missing *inter-layer* axis (the
+layer-partitioned model parallelism formalized in Hewett & Grady 2019):
+
+- :mod:`~repro.pipeline.partition` — memory-balanced contiguous stage
+  partitioner over the layer stack (``core/memory.py`` bytes)
+- :mod:`~repro.pipeline.spec`      — :class:`PipelineSpec`, carried on
+  :class:`repro.core.planner.ParallelPlan`, plus the param-spec rewrites
+  that put the stacked layer tree on the ``pipe`` mesh axis
+- :mod:`~repro.pipeline.schedule`  — GPipe and 1F1B microbatch schedules
+  as ``jax.lax.ppermute`` activation/cotangent transfers under shard_map
+- :mod:`~repro.pipeline.costs`     — bubble fraction + stage-boundary wire
+  bytes, shared with ``core/planner.py`` and ``benchmarks/hlo_cost.py``
+
+``train/step.py``'s :func:`~repro.train.step.build_pipeline_train_step` is
+the executable entry point; ``launch/train.py`` / ``launch/dryrun.py``
+accept a ``--pp`` degree.
+"""
+
+from . import costs, partition, schedule, spec
+from .costs import (boundary_act_bytes, boundary_wire_bytes,
+                    bubble_fraction, pipeline_step_seconds)
+from .partition import StagePartition, partition_layers, partition_model
+from .schedule import SCHEDULE_FNS, gpipe_grads, gpipe_loss, one_f_one_b_grads
+from .spec import (PipelineSpec, pipeline_init_state, pipeline_param_specs,
+                   pipeline_state_sds, pipeline_state_shardings,
+                   pipeline_state_specs)
+
+__all__ = [
+    "costs", "partition", "schedule", "spec",
+    "PipelineSpec", "StagePartition",
+    "partition_layers", "partition_model",
+    "bubble_fraction", "boundary_act_bytes", "boundary_wire_bytes",
+    "pipeline_step_seconds",
+    "gpipe_loss", "gpipe_grads", "one_f_one_b_grads", "SCHEDULE_FNS",
+    "pipeline_param_specs", "pipeline_state_specs",
+    "pipeline_state_shardings", "pipeline_state_sds",
+    "pipeline_init_state",
+]

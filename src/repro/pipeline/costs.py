@@ -1,0 +1,87 @@
+"""Analytic cost model for inter-layer pipeline parallelism.
+
+The two quantities the planner (and the benchmark) care about:
+
+- **bubble fraction** — the idle share of a GPipe/1F1B schedule.  With S
+  stages and M microbatches the pipeline runs M + S - 1 ticks but only M
+  of them do useful work per stage, so the bubble is (S-1)/(M+S-1)
+  (Huang et al. GPipe; identical for non-interleaved 1F1B — 1F1B changes
+  *memory*, not the bubble).
+- **stage-boundary wire bytes** — each microbatch's activation block
+  crosses every stage boundary once forward and (as a cotangent of the
+  same shape) once backward.
+
+These formulas are the single source of truth: ``core/planner.py`` scores
+DP x TP x PP candidates with them and ``benchmarks/hlo_cost.py`` re-exports
+them so HLO accounting and plan scoring agree (the same contract
+``allreduce_wire_bytes`` keeps with ``repro.comms``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+#: nominal per-device peak used to turn FLOPs into seconds.  Only the
+#: *relative* magnitude against the alpha-beta comms terms matters for
+#: candidate ranking (same convention as the LinkSpec defaults).
+DEVICE_FLOPS = 100e12
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    """Idle fraction of a GPipe/1F1B pipeline: (S-1)/(M+S-1)."""
+    if n_stages <= 1:
+        return 0.0
+    m = max(1, n_microbatches)
+    return (n_stages - 1) / (m + n_stages - 1)
+
+
+def boundary_act_bytes(microbatch: int, seq_len: int, d_model: int,
+                       itemsize: int = 2) -> int:
+    """Bytes of ONE microbatch's residual-stream activation block — the
+    tensor a ``ppermute`` moves across a stage boundary (bf16 by default)."""
+    return microbatch * seq_len * d_model * itemsize
+
+
+def boundary_wire_bytes(act_bytes: int, n_stages: int,
+                        n_microbatches: int, backward: bool = True) -> int:
+    """Total stage-boundary bytes per step, summed over the S-1 boundaries.
+
+    Forward sends every microbatch across every boundary once; the backward
+    pass sends a same-shaped cotangent back (``backward=False`` prices an
+    inference/forward-only pipeline).
+    """
+    if n_stages <= 1:
+        return 0
+    passes = 2 if backward else 1
+    return passes * act_bytes * n_microbatches * (n_stages - 1)
+
+
+def boundary_seconds(act_bytes: int, n_stages: int, n_microbatches: int,
+                     link, backward: bool = True) -> float:
+    """Alpha-beta time of the stage-boundary transfers on the critical path.
+
+    A ppermute is point-to-point: every boundary crossing off the critical
+    path overlaps with compute, so only the M + S - 2 transfers on the
+    critical chain are charged (times 2 with a backward pass).
+    """
+    if n_stages <= 1:
+        return 0.0
+    passes = 2 if backward else 1
+    hops = max(1, n_microbatches + n_stages - 2)
+    per_hop = link.latency_s + act_bytes / link.bandwidth_Bps
+    return passes * hops * per_hop
+
+
+def pipeline_step_seconds(compute_s: float, n_stages: int,
+                          n_microbatches: int, act_bytes: int,
+                          link, backward: bool = True) -> float:
+    """Cost-model seconds for one pipelined step.
+
+    ``compute_s`` is the bubble-free compute time (all stages busy); the
+    bubble stretches it by 1/(1 - bubble) and the boundary transfers add
+    their critical-path alpha-beta term.
+    """
+    bf = bubble_fraction(n_stages, n_microbatches)
+    return (compute_s / max(1e-12, 1.0 - bf)
+            + boundary_seconds(act_bytes, n_stages, n_microbatches, link,
+                               backward=backward))

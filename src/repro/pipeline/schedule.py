@@ -1,0 +1,306 @@
+"""GPipe / 1F1B microbatch schedules as ppermute pipelines under shard_map.
+
+Layer-partitioned model parallelism (Hewett & Grady 2019; dMath's
+"hybrid parallelism" third axis): the layer stack is split into S
+contiguous stages over the ``pipe`` mesh axis, activations cross each
+stage boundary with a point-to-point :func:`jax.lax.ppermute`, and
+microbatches keep every stage busy outside the (S-1)/(M+S-1) bubble.
+
+Two schedules, numerically identical (same math, same order per
+microbatch), different dependency structure:
+
+- **gpipe** — the tick loop is a ``lax.scan`` over M + S - 1 ticks of the
+  *forward* pipeline; reverse-mode autodiff replays the ticks backward
+  (ppermute transposes to the reversed permutation), which is exactly
+  GPipe's all-forwards-then-all-backwards schedule.  Compact HLO (one tick
+  body), activations stashed by the scan's autodiff.
+- **1f1b** — an explicit interleave: after warmup each tick runs one
+  forward and one backward slot per stage (the classic one-forward-
+  one-backward steady state), with stage-boundary recompute (only stage
+  *inputs* are stashed; the stage body is re-evaluated under ``jax.vjp``
+  at its backward tick).  Cotangents travel upstream through the reversed
+  ppermute each tick.
+
+SPMD note: every stage executes the same traced program — stage identity
+is ``axis_index``, edge work (embed / LM head) is computed everywhere and
+masked, so no per-stage control flow exists for the partitioner to choke
+on.  The pipe axis must be *fully manual* (ppermute placement), which
+restricts the executable path to DP x PP cells: every non-batch,
+non-pipe mesh axis must have size 1 (the same restriction as the explicit
+comms path in ``train/step.py``; TP composes at the cost-model level in
+``core/planner.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.pipeline.spec import PipelineSpec
+
+# --------------------------------------------------------------------------
+# one stage's work: [embed ->] local layer slice [-> head + loss]
+# --------------------------------------------------------------------------
+
+def _stage_apply(model, lp, x, win_local):
+    """Apply this stage's local layer slice (scan over Lp layers)."""
+    cfg = model.cfg
+    if cfg.family in ("dense", "moe", "audio"):
+        def body(carry, xs):
+            h, aux = carry
+            lp_i, win = xs
+            win = win if cfg.window is not None else None
+            h, a, _ = model._dense_block(h, lp_i, win, False)
+            return (h, aux + a), None
+
+        step = body if model.remat == "none" else jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                                   (lp, win_local))
+        return x, aux
+    if cfg.family == "ssm":
+        def body(h, lp_i):
+            h, _ = model._ssm_block(h, lp_i, False)
+            return h, None
+
+        step = body if model.remat == "none" else jax.checkpoint(body)
+        x, _ = jax.lax.scan(step, x, lp)
+        return x, jnp.zeros((), jnp.float32)
+    raise NotImplementedError(
+        f"pipeline schedules do not support family {cfg.family!r}")
+
+
+def _make_stage_fn(model):
+    """Returns stage_fn(params, x_in, mb, is_first, is_last, win_local)
+    -> (x_out, lm_loss, aux, denom).
+
+    Every stage traces the same ops (SPMD): embed and head run everywhere
+    and the masks select which result is real.  ``lm_loss`` is pre-masked
+    by ``is_last`` so downstream cotangents vanish on interior stages.
+    """
+    cfg = model.cfg
+
+    def stage_fn(params, x_in, mb, is_first, is_last, win_local):
+        emb = layers.embed(mb["tokens"], params["embed"],
+                           scale=cfg.emb_scale).astype(jnp.bfloat16)
+        x = jnp.where(is_first, emb, x_in)
+        x, aux = _stage_apply(model, params["layers"], x, win_local)
+        h = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = layers.unembed(h, params["unembed"], policy=model.policy)
+        lm, denom = layers.lm_loss(logits, mb["labels"],
+                                   vocab_real=cfg.vocab_size)
+        mask = is_last.astype(jnp.float32)
+        return x, lm * mask, aux, denom * mask
+
+    return stage_fn
+
+
+def _split_local_microbatches(batch, m: int):
+    def split(x):
+        if x.shape[0] % m:
+            raise ValueError(
+                f"local batch {x.shape[0]} not divisible by "
+                f"num_microbatches={m}")
+        return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def _take_mb(mbs, i):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+        mbs)
+
+
+def _perms(n: int) -> Tuple[list, list]:
+    down = [(i, i + 1) for i in range(n - 1)]
+    up = [(i + 1, i) for i in range(n - 1)]
+    return down, up
+
+
+def _stage_geometry(model, spec, batch):
+    """(s, is_first, is_last, n_local, win_local, seq_len) for this device."""
+    cfg = model.cfg
+    s = jax.lax.axis_index(spec.axis)
+    n_local = cfg.n_layers // spec.n_stages
+    seq_len = batch["tokens"].shape[1]
+    windows = model._window_array(seq_len)
+    if windows is None:
+        win_local = jnp.zeros((n_local,), jnp.int32)
+    else:
+        win_local = jax.lax.dynamic_slice_in_dim(
+            windows, s * n_local, n_local)
+    return s, s == 0, s == spec.n_stages - 1, n_local, win_local, seq_len
+
+
+def _total_loss(cfg, lm_mean, aux_mean):
+    loss = lm_mean
+    if cfg.family == "moe":
+        loss = loss + cfg.router_aux_coef * aux_mean / cfg.n_layers
+    return loss
+
+
+# --------------------------------------------------------------------------
+# GPipe: scanned forward ticks, autodiff backward
+# --------------------------------------------------------------------------
+
+def gpipe_loss(model, spec: PipelineSpec, params, batch):
+    """Pipelined scalar loss + metrics on this device's batch shard.
+
+    Differentiable — ``jax.value_and_grad`` of this IS the GPipe schedule
+    (the scan transpose replays ticks in reverse, cotangents ppermute
+    upstream).  Call inside a shard_map with ``spec.axis`` manual.
+    """
+    cfg = model.cfg
+    S, M = spec.n_stages, spec.num_microbatches
+    s, is_first, is_last, n_local, win_local, seq_len = _stage_geometry(
+        model, spec, batch)
+    stage_fn = _make_stage_fn(model)
+    mbs = _split_local_microbatches(batch, M)
+    b_mb = batch["tokens"].shape[0] // M
+    down, _ = _perms(S)
+
+    def tick(carry, t):
+        act, lm_acc, aux_acc, den_acc = carry
+        mf = t - s
+        valid = ((mf >= 0) & (mf < M)).astype(jnp.float32)
+        mb = _take_mb(mbs, jnp.clip(mf, 0, M - 1))
+        out, lm, aux, den = stage_fn(params, act, mb, is_first, is_last,
+                                     win_local)
+        lm_acc = lm_acc + valid * lm
+        aux_acc = aux_acc + valid * aux
+        den_acc = den_acc + valid * den
+        act = jax.lax.ppermute(out, spec.axis, down)
+        return (act, lm_acc, aux_acc, den_acc), None
+
+    act0 = jnp.zeros((b_mb, seq_len, cfg.d_model), jnp.bfloat16)
+    zero = jnp.zeros((), jnp.float32)
+    (_, lm_acc, aux_acc, den_acc), _ = jax.lax.scan(
+        tick, (act0, zero, zero, zero), jnp.arange(M + S - 1))
+
+    # Differentiate the LOCAL loss: the global sum over stages is implicit
+    # in SPMD autodiff (the ppermute transposes carry cross-stage
+    # cotangents), while an explicit psum would double-count — its
+    # transpose under check_rep=False is psum, scaling grads by S.
+    local_loss = _total_loss(cfg, lm_acc / M, aux_acc / M)
+    lm_mean = jax.lax.psum(jax.lax.stop_gradient(lm_acc), spec.axis) / M
+    aux_mean = jax.lax.psum(jax.lax.stop_gradient(aux_acc), spec.axis) / M
+    den_mean = jax.lax.psum(jax.lax.stop_gradient(den_acc), spec.axis) / M
+    loss = _total_loss(cfg, lm_mean, aux_mean)
+    return local_loss, {"loss": loss, "aux": aux_mean, "tokens": den_mean}
+
+
+def gpipe_grads(model, spec: PipelineSpec, params, batch):
+    """(grads, metrics) for the GPipe schedule (stage-local layer grads)."""
+    (_, metrics), grads = jax.value_and_grad(
+        lambda p: gpipe_loss(model, spec, p, batch), has_aux=True)(params)
+    return _combine_edge_grads(grads, spec), metrics
+
+
+# --------------------------------------------------------------------------
+# 1F1B: explicit forward/backward interleave with stage-input stash
+# --------------------------------------------------------------------------
+
+def one_f_one_b_grads(model, spec: PipelineSpec, params, batch):
+    """(grads, metrics) under the 1F1B interleave.
+
+    Tick t runs (per stage s): a forward slot for microbatch ``t - s`` and
+    a backward slot for microbatch ``t - 2(S-1) + s`` — the last stage
+    backs each microbatch the same tick its forward completes, interior
+    stages alternate one-forward-one-backward in steady state.  Stage
+    inputs are stashed and the stage body recomputed at backward time
+    (boundary remat), so per-stage live activations stay O(in-flight)
+    rather than O(M) residuals.
+
+    Numerics match :func:`gpipe_grads` exactly up to summation order: the
+    per-microbatch math is identical, only the schedule differs.
+    """
+    cfg = model.cfg
+    S, M = spec.n_stages, spec.num_microbatches
+    s, is_first, is_last, n_local, win_local, seq_len = _stage_geometry(
+        model, spec, batch)
+    stage_fn = _make_stage_fn(model)
+    mbs = _split_local_microbatches(batch, M)
+    b_mb = batch["tokens"].shape[0] // M
+    down, up = _perms(S)
+
+    act_shape = (b_mb, seq_len, cfg.d_model)
+    act_recv = jnp.zeros(act_shape, jnp.bfloat16)
+    cot_recv = jnp.zeros(act_shape, jnp.bfloat16)
+    stash = jnp.zeros((M,) + act_shape, jnp.bfloat16)
+    gacc = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    zero = jnp.zeros((), jnp.float32)
+    lm_acc, aux_acc, den_acc = zero, zero, zero
+    inv_m = 1.0 / M
+    aux_cot_scale = (cfg.router_aux_coef / (M * cfg.n_layers)
+                     if cfg.family == "moe" else 0.0)
+
+    for t in range(M + 2 * (S - 1)) if S > 1 else range(M):
+        # ---- forward slot: microbatch t - s ----------------------------
+        mf = t - s
+        fvalid = ((mf >= 0) & (mf < M)).astype(jnp.float32)
+        mbi = jnp.clip(mf, 0, M - 1)
+        mb = _take_mb(mbs, mbi)
+        out, lm, aux, den = stage_fn(params, act_recv, mb, is_first,
+                                     is_last, win_local)
+        lm_acc = lm_acc + fvalid * lm
+        aux_acc = aux_acc + fvalid * aux
+        den_acc = den_acc + fvalid * den
+        cur = jax.lax.dynamic_index_in_dim(stash, mbi, 0, keepdims=True)
+        stash = jax.lax.dynamic_update_index_in_dim(
+            stash, jnp.where(fvalid > 0, act_recv[None], cur), mbi, 0)
+        act_recv = jax.lax.ppermute(out, spec.axis, down)
+
+        # ---- backward slot: microbatch t - 2(S-1) + s ------------------
+        # (its forward ran at tick mbw + s <= t, so the stash is ready;
+        # on the last stage it ran THIS tick, just above)
+        mbw = t - 2 * (S - 1) + s
+        bvalid = ((mbw >= 0) & (mbw < M)).astype(jnp.float32)
+        mbi_b = jnp.clip(mbw, 0, M - 1)
+        mb_b = _take_mb(mbs, mbi_b)
+        x_in_b = jax.lax.dynamic_index_in_dim(stash, mbi_b, 0,
+                                              keepdims=False)
+
+        def fwd(p, x):
+            o, lm_b, aux_b, _ = stage_fn(p, x, mb_b, is_first, is_last,
+                                         win_local)
+            return o, lm_b, aux_b
+
+        _, vjp_fn = jax.vjp(fwd, params, x_in_b)
+        g_out = cot_recv                       # zeros on the last stage
+        dparams, dx = vjp_fn((g_out,
+                              jnp.asarray(inv_m, jnp.float32),
+                              jnp.asarray(aux_cot_scale, jnp.float32)))
+        gacc = jax.tree.map(
+            lambda a, g: a + bvalid * g.astype(jnp.float32), gacc, dparams)
+        cot_recv = jax.lax.ppermute(
+            (bvalid * dx.astype(jnp.float32)).astype(jnp.bfloat16),
+            spec.axis, up)
+
+    lm_mean = jax.lax.psum(lm_acc, spec.axis) / M
+    aux_mean = jax.lax.psum(aux_acc, spec.axis) / M
+    den_mean = jax.lax.psum(den_acc, spec.axis) / M
+    loss = _total_loss(cfg, lm_mean, aux_mean)
+    metrics = {"loss": loss, "aux": aux_mean, "tokens": den_mean}
+    return _combine_edge_grads(gacc, spec), metrics
+
+
+def _combine_edge_grads(grads, spec: PipelineSpec):
+    """psum the edge (non-stage-local) parameter grads over the pipe axis.
+
+    The layer stack's grads are stage-local by construction; embed /
+    unembed / final-norm grads are nonzero only on the stage that consumed
+    them, and every pipe member must agree before the optimizer runs.
+    """
+    out = {}
+    for k, v in grads.items():
+        if k == "layers":
+            out[k] = v
+        else:
+            out[k] = jax.tree.map(
+                lambda g: jax.lax.psum(g, spec.axis), v)
+    return out
+
+
+SCHEDULE_FNS = {"gpipe": gpipe_grads, "1f1b": one_f_one_b_grads}

@@ -1,0 +1,105 @@
+"""PipelineSpec: the declarative pipeline-parallel policy on a ParallelPlan.
+
+Mirrors :class:`repro.comms.CommsPlan`: one frozen object names the stage
+count, the mesh axis, the microbatch schedule and the stage boundaries;
+``train/step.py`` executes it, ``core/planner.py`` scores it, and the
+parameter-spec rewrites here put the stacked layer tree on the ``pipe``
+axis so jit/checkpoint/optimizer all see pipeline-sharded state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+
+from repro.models.params import ParamSpec
+from repro.pipeline import costs
+
+SCHEDULES = ("gpipe", "1f1b")
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    """Declarative inter-layer pipeline policy for one training cell."""
+
+    n_stages: int
+    axis: str = "pipe"
+    schedule: str = "gpipe"              # gpipe | 1f1b
+    num_microbatches: int = 4
+    boundaries: Tuple[int, ...] = ()     # from partition.StagePartition
+
+    def __post_init__(self):
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"unknown pipeline schedule {self.schedule!r}; "
+                             f"expected one of {SCHEDULES}")
+        if self.num_microbatches < 1:
+            raise ValueError("num_microbatches must be >= 1")
+
+    def bubble_fraction(self) -> float:
+        return costs.bubble_fraction(self.n_stages, self.num_microbatches)
+
+    def boundary_wire_bytes(self, microbatch: int, seq_len: int,
+                            d_model: int) -> int:
+        act = costs.boundary_act_bytes(microbatch, seq_len, d_model)
+        return costs.boundary_wire_bytes(act, self.n_stages,
+                                         self.num_microbatches)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def pipeline_param_specs(model, spec: PipelineSpec):
+    """The model's param specs with the stacked layer dim on ``spec.axis``.
+
+    Embed / unembed / final norm stay in their planner layouts (replicated
+    across pipe — only the edge stages consume them, and their gradients
+    are combined with a psum over the pipe axis).
+    """
+    cfg = model.cfg
+    if cfg.n_layers % spec.n_stages:
+        raise ValueError(f"n_layers={cfg.n_layers} not divisible by "
+                         f"pp={spec.n_stages}")
+    pspecs = dict(model.param_specs())
+
+    def stagewise(s: ParamSpec) -> ParamSpec:
+        assert s.shape[0] == cfg.n_layers, (s.shape, cfg.n_layers)
+        return dataclasses.replace(
+            s, layout=s.layout.with_dim(0, spec.axis))
+
+    pspecs["layers"] = jax.tree.map(stagewise, pspecs["layers"],
+                                    is_leaf=_is_spec)
+    return pspecs
+
+
+def pipeline_state_specs(model, mesh, spec: PipelineSpec, adamw=None):
+    from repro.train import optimizer as opt
+    pspecs = pipeline_param_specs(model, spec)
+    return {"params": pspecs,
+            "opt": opt.state_specs(pspecs, mesh, adamw)}
+
+
+def pipeline_state_shardings(model, mesh, spec: PipelineSpec, adamw=None):
+    return jax.tree.map(lambda s: s.sharding(mesh),
+                        pipeline_state_specs(model, mesh, spec, adamw),
+                        is_leaf=_is_spec)
+
+
+def pipeline_state_sds(model, mesh, spec: PipelineSpec, adamw=None):
+    return jax.tree.map(lambda s: s.sds(),
+                        pipeline_state_specs(model, mesh, spec, adamw),
+                        is_leaf=_is_spec)
+
+
+def pipeline_init_state(model, mesh, spec: PipelineSpec, key):
+    """Initialized {params, opt} dict placed on the pipeline shardings."""
+    from repro.train import optimizer as opt
+    pspecs = pipeline_param_specs(model, spec)
+    params = model.init(key)
+    params = jax.device_put(
+        params, jax.tree.map(lambda s: s.sharding(mesh), pspecs,
+                             is_leaf=_is_spec))
+    return {"params": params,
+            "opt": opt.init_state(params, pspecs, mesh)}

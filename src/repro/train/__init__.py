@@ -1,10 +1,11 @@
 from . import compression, optimizer, step, watchdog
 from .optimizer import AdamWConfig, warmup_cosine
-from .step import TrainState, build_train_step, init_state, state_sds, \
-    state_shardings, state_specs
+from .step import TrainState, build_pipeline_train_step, build_train_step, \
+    init_state, state_sds, state_shardings, state_specs
 from .watchdog import StepTimeWatchdog
 
 __all__ = ["compression", "optimizer", "step", "watchdog",
            "AdamWConfig", "warmup_cosine", "TrainState", "build_train_step",
+           "build_pipeline_train_step",
            "init_state", "state_sds", "state_shardings", "state_specs",
            "StepTimeWatchdog"]

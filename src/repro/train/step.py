@@ -220,6 +220,101 @@ def build_comms_train_step(
     return train_step
 
 
+def build_pipeline_train_step(
+    model,
+    mesh,
+    adamw: Optional[opt.AdamWConfig] = None,
+    num_microbatches: Optional[int] = None,
+    pipeline=None,
+    comms=None,
+) -> Callable:
+    """Train step with the layer stack pipelined over the ``pipe`` axis.
+
+    The loss/grad computation moves inside a fully-manual ``shard_map``:
+    each pipe member holds a contiguous stage of the stacked layer tree
+    (dim 0 sharded over ``pipe``) and runs the schedule named by the
+    :class:`repro.pipeline.PipelineSpec` (``gpipe`` | ``1f1b``) — forward
+    activations and backward cotangents cross stage boundaries as
+    ``jax.lax.ppermute`` transfers.  Gradient sync on the batch axes
+    composes with the PR-1 comms path: pass a
+    :class:`repro.comms.CommsPlan` to route the DP all-reduce through the
+    explicit bucketed schedules, otherwise a plain ``pmean`` runs.
+
+    Restriction (same as :func:`build_comms_train_step`): every mesh axis
+    other than the batch axes and ``pipe`` must have size 1 — the pipe
+    axis needs manual ppermute placement, so TP stays a cost-model-level
+    composition (see ``core/planner.py``).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro import pipeline as pipe_mod
+    from repro.comms import plan as comms_plan_mod
+
+    adamw = adamw or opt.AdamWConfig()
+    spec = pipeline or getattr(model.plan, "pipeline", None)
+    if spec is None:
+        from repro.core.planner import pipeline_spec_for
+        spec = pipeline_spec_for(model.cfg, mesh,
+                                 num_microbatches=num_microbatches)
+    if spec is None:
+        raise ValueError("build_pipeline_train_step needs a 'pipe' mesh "
+                         "axis or an explicit PipelineSpec")
+    if num_microbatches is not None \
+            and num_microbatches != spec.num_microbatches:
+        spec = dataclasses.replace(spec, num_microbatches=num_microbatches)
+    if mesh.shape.get(spec.axis, 1) != spec.n_stages:
+        raise ValueError(
+            f"PipelineSpec wants {spec.n_stages} stages but mesh axis "
+            f"{spec.axis!r} has size {mesh.shape.get(spec.axis, 1)}")
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    bad = {a: n for a, n in mesh.shape.items()
+           if a not in batch_axes + (spec.axis,) and n > 1}
+    if bad:
+        raise ValueError(
+            "pipeline train step is DP x PP: non-batch, non-pipe mesh "
+            f"axes must have size 1, got {bad}")
+
+    pspecs = pipe_mod.pipeline_param_specs(model, spec)
+    is_spec = lambda x: hasattr(x, "layout")
+    # The in/out specs name ONLY the pipe axis (the shard_map itself holds
+    # every mesh axis manual): the layer stack enters as this stage's
+    # (L/S, ...) slice, everything else at full size.  Storage layouts
+    # (FSDP/ZeRO shards over the data axis) stay on the state — GSPMD
+    # gathers/scatters them at the shard_map boundary, same as the
+    # explicit-comms path's P() params.
+    param_spec_tree = {
+        k: jax.tree.map(
+            lambda s, _k=k: P(spec.axis) if _k == "layers" else P(), v,
+            is_leaf=is_spec)
+        for k, v in pspecs.items()}
+    sched_fn = pipe_mod.SCHEDULE_FNS[spec.schedule]
+
+    def local_step(params, batch):
+        grads, metrics = sched_fn(model, spec, params, batch)
+        if comms is not None:
+            grads = comms_plan_mod.sync_tree(grads, comms, mesh, batch_axes)
+        elif batch_axes:
+            grads = jax.tree.map(
+                lambda g: jax.lax.pmean(g, batch_axes), grads)
+        if batch_axes:
+            metrics = jax.tree.map(
+                lambda m: jax.lax.pmean(m, batch_axes), metrics)
+        return grads, metrics
+
+    def train_step(state, batch):
+        grads, metrics = jax.shard_map(
+            local_step, check_vma=False, mesh=mesh,
+            in_specs=(param_spec_tree, P(batch_axes)),
+            out_specs=(param_spec_tree, P()),
+        )(state["params"], batch)
+        new_params, new_opt, stats = opt.apply(
+            adamw, state["opt"], grads, pspecs, mesh)
+        metrics = dict(metrics, **stats)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
 def jit_train_step(model, mesh, train_step, batch_shardings):
     """jit with explicit in/out shardings + state donation."""
     st_sh = state_shardings(model, mesh)

@@ -1,0 +1,112 @@
+"""Deterministic mini-substitute for hypothesis (drop-in for this suite).
+
+CI installs the real ``hypothesis`` (pyproject dev/test extras) and gets
+full shrinking + 25-example search.  On machines without it the property
+tests used to SKIP wholesale; this shim keeps them running as seeded
+smoke-level property checks: each ``@given`` test runs a fixed number of
+pseudo-random examples drawn from a PRNG seeded by the test name, so
+failures are reproducible and the suite stays dependency-free.
+
+Only the strategy surface this repo uses is implemented: ``integers``,
+``sampled_from``, ``fixed_dictionaries``, ``tuples``, ``lists``,
+``booleans``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_FALLBACK_MAX_EXAMPLES = 6      # smoke-level; real hypothesis runs 25
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._sample(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def sample(rng):
+            for _ in range(_tries):
+                x = self._sample(rng)
+                if pred(x):
+                    return x
+            raise ValueError("filter predicate too strict for fallback")
+        return _Strategy(sample)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=2**31 - 1):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def fixed_dictionaries(mapping):
+        items = list(mapping.items())
+        return _Strategy(
+            lambda rng: {k: v.sample(rng) for k, v in items})
+
+    @staticmethod
+    def tuples(*strategies):
+        return _Strategy(
+            lambda rng: tuple(s.sample(rng) for s in strategies))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=8):
+        def sample(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.sample(rng) for _ in range(n)]
+        return _Strategy(sample)
+
+
+st = strategies = _Strategies()
+
+
+class settings:
+    """Accepts hypothesis kwargs; only max_examples matters (capped)."""
+
+    def __init__(self, max_examples=_FALLBACK_MAX_EXAMPLES, **_ignored):
+        self.max_examples = min(max_examples, _FALLBACK_MAX_EXAMPLES)
+
+    def __call__(self, fn):
+        fn._fallback_max_examples = self.max_examples
+        return fn
+
+
+def given(*strategies_args):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                _FALLBACK_MAX_EXAMPLES))
+            rng = random.Random(fn.__qualname__)
+            for i in range(n):
+                drawn = tuple(s.sample(rng) for s in strategies_args)
+                try:
+                    fn(*drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property falsified on fallback example {i}: "
+                        f"args={drawn!r}") from e
+        # hide the property's parameters from pytest's fixture resolution
+        # (real hypothesis does the same: the wrapper takes no arguments)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

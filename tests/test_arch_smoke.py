@@ -39,6 +39,7 @@ def _batch(cfg, B=2, S=32):
             "labels": jnp.ones((B, S), jnp.int32) * 2}
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_arch_forward_and_train_step(arch, mesh):
     cfg = scale_config(get_config(arch), down=64)

@@ -56,6 +56,7 @@ def test_async_save_and_gc(tmp_path):
         assert sorted(mgr.all_steps()) == [3, 4]
 
 
+@pytest.mark.slow
 def test_bitwise_resume(tmp_path):
     """Train 2+2 steps vs checkpoint-at-2 then resume: bitwise identical
     (paper §2.3 reproducibility + §2 fault tolerance together)."""
@@ -81,6 +82,7 @@ def test_bitwise_resume(tmp_path):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_elastic_reshard(tmp_path):
     """Restore a checkpoint onto a DIFFERENT mesh shape (fleet shrank) —
     paper §3.3 reshape 'over a superset/subset of processes'."""

@@ -15,6 +15,9 @@ def _in_child() -> bool:
 
 
 if not _in_child():
+    import pytest
+
+    @pytest.mark.slow
     def test_comms_subprocess():
         env = dict(os.environ)
         env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")

@@ -1,0 +1,149 @@
+"""GEMM conformance matrix: every algorithm x operand-layout pair against a
+dense ``jnp.matmul`` reference, plus the auto-dispatch table pinned to the
+mapping ``core/gemm.py``'s module docstring documents.
+
+Runs in a child process with 8 fake host devices (same pattern as
+test_core_gemm.py, which keeps its narrower correctness battery; this file
+is the exhaustive sweep the dispatcher's docstring promises).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+DEVS = 8
+
+
+def _in_child() -> bool:
+    return os.environ.get("REPRO_GEMM_CONF_DEVICES") == str(DEVS)
+
+
+if not _in_child():
+    def test_gemm_conformance_subprocess():
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count={DEVS}")
+        env["REPRO_GEMM_CONF_DEVICES"] = str(DEVS)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")]
+            + env.get("PYTHONPATH", "").split(os.pathsep))
+        r = subprocess.run(
+            [sys.executable, "-m", "pytest", "-q", "-x", __file__],
+            env=env, capture_output=True, text=True, timeout=900)
+        if r.returncode != 0:
+            pytest.fail("child failed:\n" + r.stdout[-4000:] + r.stderr[-4000:])
+else:
+    import itertools
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import gemm, precision
+    from repro.core.layout import Layout
+
+    M, K, N = 32, 64, 48        # divisible by model=4, data=2, and 8
+
+    @pytest.fixture(scope="module")
+    def mesh():
+        assert len(jax.devices()) == DEVS
+        return jax.make_mesh(
+            (2, 4), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    def _rand(shape, seed=0):
+        return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                                 dtype=jnp.float32)
+
+    LAYOUTS = {
+        "rep": Layout.replicated(2),
+        "row": Layout.row_sharded(2, "model"),
+        "col": Layout.col_sharded(2, "model"),
+        "b2d": Layout.blocked_2d(("data", "model")),
+    }
+    ALGOS = {
+        "local": lambda a, b, mesh: precision.matmul(
+            a, b, policy=precision.FULL),
+        "row_par": lambda a, b, mesh: gemm.gemm_row_parallel(
+            a, b, mesh, policy=precision.FULL),
+        "col_par": lambda a, b, mesh: gemm.gemm_col_parallel(
+            a, b, mesh, policy=precision.FULL),
+        "inner_psum": lambda a, b, mesh: gemm.gemm_inner_psum(
+            a, b, mesh, policy=precision.FULL),
+        "inner_rs": lambda a, b, mesh: gemm.gemm_inner_rs(
+            a, b, mesh, policy=precision.FULL),
+        "summa2d": lambda a, b, mesh: gemm.gemm_summa2d(
+            a, b, mesh, policy=precision.FULL),
+    }
+
+    # ---- every explicit algorithm against the dense reference -----------
+    @pytest.mark.parametrize("alg", sorted(ALGOS))
+    @pytest.mark.parametrize("mkn", [(M, K, N), (16, 32, 16)])
+    def test_algorithm_matches_dense_reference(mesh, alg, mkn):
+        m, k, n = mkn
+        a, b = _rand((m, k)), _rand((k, n), 1)
+        with jax.set_mesh(mesh):
+            c = ALGOS[alg](a, b, mesh)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b),
+                                   rtol=2e-5, atol=2e-5)
+
+    # ---- auto: correct for EVERY operand-layout pair ---------------------
+    @pytest.mark.parametrize("la,lb", list(itertools.product(LAYOUTS,
+                                                             LAYOUTS)))
+    def test_auto_correct_all_layout_pairs(mesh, la, lb):
+        a, b = _rand((M, K)), _rand((K, N), 1)
+        with jax.set_mesh(mesh):
+            c, plan = gemm.gemm_auto(a, b, LAYOUTS[la], LAYOUTS[lb], mesh,
+                                     policy=precision.FULL)
+        assert plan.algorithm in set(ALGOS), plan
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b),
+                                   rtol=2e-5, atol=2e-5)
+
+    # ---- auto: correct for every pair x requested OUT layout -------------
+    @pytest.mark.parametrize("la,lb,lout", [
+        ("col", "row", "rep"), ("col", "row", "row"),
+        ("b2d", "b2d", "b2d"), ("rep", "rep", "col"),
+        ("row", "col", "b2d"),
+    ])
+    def test_auto_correct_with_out_layout(mesh, la, lb, lout):
+        a, b = _rand((M, K)), _rand((K, N), 1)
+        with jax.set_mesh(mesh):
+            c, _ = gemm.gemm_auto(a, b, LAYOUTS[la], LAYOUTS[lb], mesh,
+                                  out_layout=LAYOUTS[lout],
+                                  policy=precision.FULL)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b),
+                                   rtol=2e-5, atol=2e-5)
+
+    # ---- auto dispatches per the module docstring's table ----------------
+    # (layout pair [+ requested C layout] -> documented algorithm)
+    DOCUMENTED = [
+        ("rep", "rep", None, "local"),        # compatible -> no comm
+        ("row", "rep", None, "row_par"),      # A L[ax,-], B L[-,-]
+        ("rep", "col", None, "col_par"),      # A L[-,-],  B L[-,ax]
+        ("col", "row", "rep", "inner_psum"),  # K-sharded -> all-reduce(C)
+        ("col", "row", "row", "inner_rs"),    # K-sharded -> RS(C)
+        ("col", "row", None, "inner_rs"),     # cheapest inner variant
+        ("b2d", "b2d", "b2d", "summa2d"),     # fully 2-D blocked
+    ]
+
+    @pytest.mark.parametrize("la,lb,lout,expected", DOCUMENTED)
+    def test_auto_dispatch_matches_docstring(mesh, la, lb, lout, expected):
+        out = None if lout is None else LAYOUTS[lout]
+        plan = gemm.plan_gemm((M, K), (K, N), jnp.float32,
+                              LAYOUTS[la], LAYOUTS[lb], mesh,
+                              out_layout=out)
+        assert plan.algorithm == expected, (la, lb, lout, plan)
+
+    def test_auto_dispatch_zero_relayout_when_compatible(mesh):
+        """Documented tie-break: already-compatible operands never pay a
+        relayout (the zero-relayout algorithm wins exact cost ties)."""
+        for la, lb, alg in [("row", "rep", "row_par"),
+                            ("rep", "col", "col_par"),
+                            ("rep", "rep", "local")]:
+            plan = gemm.plan_gemm((M, K), (K, N), jnp.float32,
+                                  LAYOUTS[la], LAYOUTS[lb], mesh)
+            assert plan.algorithm == alg
+            assert plan.a_relayout in (None, LAYOUTS[la])
+            assert plan.b_relayout in (None, LAYOUTS[lb])

@@ -30,6 +30,7 @@ def mesh():
     return make_mesh((1, 1), ("data", "model"))
 
 
+@pytest.mark.slow
 def test_training_learns_copy_task(mesh):
     """Next-token prediction on a fixed repeating sequence must -> ~0."""
     with jax.set_mesh(mesh):
@@ -51,6 +52,7 @@ def test_training_learns_copy_task(mesh):
         assert losses[-1] < 1.0
 
 
+@pytest.mark.slow
 def test_engine_batched_requests_deterministic(mesh):
     with jax.set_mesh(mesh):
         plan = plan_for(TINY, mesh)
@@ -94,6 +96,7 @@ def test_engine_batched_requests_deterministic(mesh):
             assert a.out == b.out, (a.rid, a.out, b.out)
 
 
+@pytest.mark.slow
 def test_pipeline_feeds_training(mesh):
     with jax.set_mesh(mesh):
         plan = plan_for(TINY, mesh)
