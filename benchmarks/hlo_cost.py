@@ -404,6 +404,25 @@ def pipeline_step_seconds(compute_s: float, n_stages: int,
                                        int(act_bytes), link)
 
 
+def stage_footprints(cfg, **kw):
+    """Per-stage predicted bytes for a train cell.
+
+    Delegates to :func:`repro.core.memory.estimate_stage_footprints` — the
+    single source of truth shared with the planner's OOM refusal and the
+    dry-run footprint table, so benchmark accounting and plan scoring
+    agree (same contract the pipeline formulas above keep).
+    """
+    from repro.core import memory
+    return memory.estimate_stage_footprints(cfg, **kw)
+
+
+def predicted_peak_bytes(cfg, **kw) -> int:
+    """Peak-stage total of :func:`stage_footprints` (the per-device peak of
+    a uniform SPMD pipeline program)."""
+    from repro.core import memory
+    return memory.peak_stage_footprint(stage_footprints(cfg, **kw)).total
+
+
 def collective_seconds(cost: Cost, topology, n: Optional[int] = None) -> float:
     """Alpha-beta time estimate for a Cost's collectives on a topology.
 

@@ -8,6 +8,8 @@
   collectives   repro.comms schedules: measured vs cost-model (8 fake devices)
   pipeline_parallel  repro.pipeline: measured vs predicted bubble fraction
                 and stage-boundary bytes (8 fake devices)
+  memory_model  core/memory per-stage footprint vs compiled
+                memory_analysis(); 1F1B ring vs all-M stash (8 fake devices)
   kernels       Pallas kernels (interpret) vs oracles
   roofline      §Roofline summary from the dry-run artifacts (if present)
 
@@ -25,6 +27,7 @@ MULTIDEV = {"gemm": "benchmarks.gemm_layouts",
             "compression": "benchmarks.compression_bench",
             "collectives": "benchmarks.collectives_bench",
             "pipeline_parallel": "benchmarks.pipeline_parallel_bench",
+            "memory_model": "benchmarks.memory_model_bench",
             "table1": "benchmarks.table1"}
 LOCAL = {"precision": "benchmarks.precision_bench",
          "pipeline": "benchmarks.pipeline_bench",

@@ -269,7 +269,10 @@ def pipeline_spec_for(cfg, mesh: Mesh, *,
 def score_hybrid_candidates(cfg, n_devices: int, *, global_batch: int,
                             seq_len: int,
                             num_microbatches: Optional[int] = None,
-                            intra=None, inter=None) -> dict:
+                            intra=None, inter=None,
+                            schedule: str = "gpipe",
+                            hbm_budget=None, check_memory: bool = True,
+                            return_refused: bool = False):
     """Cost-model seconds per (dp, tp, pp) factorization of ``n_devices``.
 
     The planner's hybrid-parallelism score (paper §4: DP where activations
@@ -286,18 +289,28 @@ def score_hybrid_candidates(cfg, n_devices: int, *, global_batch: int,
       best-schedule over the dp group (``comms/topology.py``).
 
     Infeasible cells (head counts or layer counts that do not divide, a
-    batch smaller than dp) are omitted.
+    batch smaller than dp) are omitted.  Cells whose *memory* does not fit
+    are **refused**, not scored: the per-stage footprint model
+    (``core/memory.py``) prices every stage of the (dp, tp, pp, M)
+    candidate under ``schedule`` and the candidate is dropped when the
+    peak stage exceeds ``hbm_budget.usable`` (default: the v5e budget; a
+    :class:`repro.core.memory.MemoryBudget`, raw bytes, or ``--hbm-gib``
+    via :func:`repro.core.memory.budget_for`).  Pass
+    ``return_refused=True`` to also get ``{(dp, tp, pp, M): reason}``.
     """
     from repro.comms import topology as topo_mod
+    from repro.core import memory as mem_mod
     from repro.pipeline import costs as pipe_costs
 
     intra = intra or topo_mod.PCIE_GEN3
     inter = inter or topo_mod.FDR_IB
+    budget = mem_mod.as_budget(hbm_budget)
     n_params = approx_param_count(cfg)
     L = max(1, getattr(cfg, "n_layers", 1) or 1)
     heads = getattr(cfg, "n_heads", 0) or 0
     D = getattr(cfg, "d_model", 1) or 1
-    scores = {}
+    scores: dict = {}
+    refused: dict = {}
     for dp in range(1, n_devices + 1):
         if n_devices % dp or global_batch % dp:
             continue
@@ -312,6 +325,20 @@ def score_hybrid_candidates(cfg, n_devices: int, *, global_batch: int,
             local_batch = global_batch // dp
             M = num_microbatches or max(1, min(4 * pp, local_batch))
             M = math.gcd(local_batch, M) or 1
+
+            if check_memory:
+                stages = mem_mod.estimate_stage_footprints(
+                    cfg, local_batch=local_batch, seq_len=seq_len,
+                    n_stages=pp, num_microbatches=M,
+                    schedule=schedule if pp > 1 else None,
+                    zero_shards=dp, tp_shards=tp)
+                peak = mem_mod.peak_stage_footprint(stages)
+                if not peak.fits(budget):
+                    refused[(dp, tp, pp, M)] = (
+                        f"peak stage {peak.total / mem_mod.GIB:.2f} GiB > "
+                        f"usable {budget.usable / mem_mod.GIB:.2f} GiB "
+                        f"({budget.platform})")
+                    continue
 
             t_comp = (6.0 * n_params * global_batch * seq_len
                       / n_devices / pipe_costs.DEVICE_FLOPS)
@@ -334,15 +361,33 @@ def score_hybrid_candidates(cfg, n_devices: int, *, global_batch: int,
                 grad_bytes = int(4 * n_params / (tp * pp))
                 t_dp = min(topo.schedule_scores(grad_bytes).values())
             scores[(dp, tp, pp)] = t_pipe + t_dp
+    if return_refused:
+        return scores, refused
     return scores
 
 
-def best_hybrid(cfg, n_devices: int, **kwargs) -> Tuple[int, int, int]:
-    """argmin (dp, tp, pp) over :func:`score_hybrid_candidates`."""
-    scores = score_hybrid_candidates(cfg, n_devices, **kwargs)
+def best_hybrid(cfg, n_devices: int, **kwargs):
+    """argmin (dp, tp, pp) over :func:`score_hybrid_candidates`.
+
+    Memory-governed: OOM candidates were refused during scoring, so the
+    argmin is the fastest plan that *fits*.  When every factorization is
+    refused the error lists each (dp, tp, pp, M) with its reason — the
+    resource-model verdict, not a crash at allocation time.  With
+    ``return_refused=True`` returns ``(best, refused)``.
+    """
+    want_refused = kwargs.pop("return_refused", False)
+    scores, refused = score_hybrid_candidates(cfg, n_devices,
+                                              return_refused=True, **kwargs)
     if not scores:
-        raise ValueError(f"no feasible (dp, tp, pp) for {n_devices} devices")
-    return min(scores, key=scores.get)
+        detail = "; ".join(
+            f"(dp={k[0]}, tp={k[1]}, pp={k[2]}, M={k[3]}): {v}"
+            for k, v in sorted(refused.items()))
+        raise ValueError(
+            f"no feasible (dp, tp, pp) for {n_devices} devices"
+            + (f" — all candidates refused by the memory model: {detail}"
+               if refused else ""))
+    best = min(scores, key=scores.get)
+    return (best, refused) if want_refused else best
 
 
 def plan_for(cfg, mesh: Mesh, *, fsdp_tensor_bytes: float = 4 * GiB,

@@ -14,6 +14,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import (SHAPES, default_microbatches, get_config,  # noqa: E402
                            input_specs, cells)
+from repro.core import memory as mem_mod  # noqa: E402
 from repro.core.planner import plan_for  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import Model  # noqa: E402
@@ -177,7 +178,9 @@ def build_lowered(arch: str, shape_name: str, mesh, *,
                     out_shardings=(st_sh, None), donate_argnums=(0,))
         lowered = f.lower(st_sds, b_sds)
         meta = {"step": "train_step", "microbatches": nmb,
-                "pp": mesh.shape.get("pipe", 1)}
+                "pp": mesh.shape.get("pipe", 1),
+                "moment_itemsize": jnp.dtype(
+                    adamw.moment_dtype if adamw else jnp.float32).itemsize}
 
     elif shape.kind == "prefill":
         p_sds = model.param_sds()
@@ -214,15 +217,31 @@ def build_lowered(arch: str, shape_name: str, mesh, *,
     return lowered, meta, model
 
 
+def predicted_footprints(model, mesh, meta, shape_name: str):
+    """Per-stage memory-model prediction for a lowered train cell.
+
+    Shares :func:`repro.core.memory.footprints_for_mesh` with the
+    ``launch/train.py`` fail-fast; the schedule comes from the plan's
+    PipelineSpec (what ``build_lowered`` actually compiles)."""
+    shape = SHAPES[shape_name]
+    spec = model.plan.pipeline
+    return mem_mod.footprints_for_mesh(
+        model.cfg, mesh, global_batch=shape.global_batch,
+        seq_len=shape.seq_len,
+        num_microbatches=meta.get("microbatches", 1),
+        schedule=spec.schedule if spec is not None else "gpipe",
+        moment_itemsize=meta.get("moment_itemsize", 4))
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              microbatches: Optional[int] = None, model_kwargs=None,
              plan_kwargs=None, hlo_out: Optional[str] = None,
-             pp: int = 1) -> Dict[str, Any]:
+             pp: int = 1, hbm_gib: Optional[float] = None) -> Dict[str, Any]:
     mesh = make_production_mesh(multi_pod=multi_pod, pp=pp)
     n_chips = 512 if multi_pod else 256
     with jax.set_mesh(mesh):
         t0 = time.time()
-        lowered, meta, _ = build_lowered(
+        lowered, meta, model = build_lowered(
             arch, shape_name, mesh, microbatches=microbatches,
             model_kwargs=model_kwargs, plan_kwargs=plan_kwargs)
         t_lower = time.time() - t0
@@ -260,10 +279,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             "output_bytes": mem.output_size_in_bytes,
             "temp_bytes": mem.temp_size_in_bytes,
             "alias_bytes": mem.alias_size_in_bytes,
-            "peak_bytes": (mem.argument_size_in_bytes
-                           + mem.output_size_in_bytes
-                           + mem.temp_size_in_bytes
-                           - mem.alias_size_in_bytes),
+            "peak_bytes": mem_mod.compiled_peak_bytes(compiled),
         },
         "cost": {"flops": ca.get("flops", 0.0),
                  "bytes_accessed": ca.get("bytes accessed", 0.0)},
@@ -271,6 +287,29 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         "collective_wire_bytes": sum(c["wire_bytes"] for c in colls),
         "n_collectives": len(colls),
     }
+
+    if meta.get("step") == "train_step":
+        # per-stage footprint model vs the platform budget: the predicted
+        # side of the fits/OOM verdict (memory_analysis is the measured
+        # side).  Printed as a table; recorded in the artifact so CI can
+        # track the predicted-vs-measured gap per PR.
+        budget = mem_mod.budget_for(mesh, hbm_gib=hbm_gib)
+        fps = predicted_footprints(model, mesh, meta, shape_name)
+        peak = mem_mod.peak_stage_footprint(fps)
+        print(f"memory model ({arch} {shape_name}):")
+        print(mem_mod.footprint_table(fps, budget))
+        result["memory_model"] = {
+            "budget": {"platform": budget.platform,
+                       "hbm_bytes": budget.hbm_bytes,
+                       "headroom": budget.headroom,
+                       "usable_bytes": budget.usable},
+            "per_stage": [{k: getattr(f, k) for k in f._FIELDS}
+                          for f in fps],
+            "per_stage_total_bytes": [f.total for f in fps],
+            "predicted_peak_bytes": peak.total,
+            "measured_peak_bytes": result["memory"]["peak_bytes"],
+            "fits": all(f.fits(budget) for f in fps),
+        }
     return result
 
 
@@ -285,6 +324,9 @@ def main():
     ap.add_argument("--pp", type=int, default=1,
                     help="pipeline stages: carve a 'pipe' axis out of the "
                          "pod (DP x PP cell; train shapes only)")
+    ap.add_argument("--hbm-gib", type=float, default=None,
+                    help="per-device HBM budget in GiB for the footprint "
+                         "verdict (default: platform table in core/memory)")
     ap.add_argument("--out", type=str, default="experiments/dryrun")
     ap.add_argument("--hlo-out", type=str, default=None)
     args = ap.parse_args()
@@ -309,12 +351,17 @@ def main():
                     args.out, tag + ".hlo.gz")
                 res = run_cell(arch, shape, multi_pod=mp,
                                microbatches=args.microbatches,
-                               hlo_out=hlo_out, pp=args.pp)
+                               hlo_out=hlo_out, pp=args.pp,
+                               hbm_gib=args.hbm_gib)
                 path = os.path.join(args.out, tag + ".json")
                 with open(path, "w") as f:
                     json.dump(res, f, indent=1)
                 gib = res["memory"]["peak_bytes"] / 2**30
-                print(f"OK   {tag}: peak {gib:.2f} GiB/dev, "
+                mm = res.get("memory_model")
+                pred = (f", pred {mm['predicted_peak_bytes'] / 2**30:.2f} "
+                        f"GiB {'fits' if mm['fits'] else 'OOM'}"
+                        if mm else "")
+                print(f"OK   {tag}: peak {gib:.2f} GiB/dev{pred}, "
                       f"flops {res['cost']['flops']:.3e}, "
                       f"colls {res['n_collectives']} "
                       f"({res['collective_wire_bytes'] / 2**30:.2f} GiB wire), "

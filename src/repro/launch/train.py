@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.checkpoint import CheckpointManager
 from repro.configs import SHAPES, get_config, input_specs
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import memory as mem_mod
 from repro.core.planner import plan_for
 from repro.data import Pipeline, Stage, SyntheticLM
 from repro.launch import mesh as mesh_mod
@@ -59,15 +60,53 @@ def scale_config(cfg: ModelConfig, down: int) -> ModelConfig:
     return dataclasses.replace(cfg, **kw)
 
 
+class PlanMemoryError(ValueError):
+    """The memory model refused the plan (see validate_plan_memory)."""
+
+
+def validate_plan_memory(cfg, mesh, *, batch: int, seq: int,
+                         microbatches: int, schedule: str,
+                         hbm_gib: Optional[float] = None) -> None:
+    """Fail fast when the memory model says the plan cannot fit.
+
+    Runs before anything is traced or compiled: the per-stage footprint
+    model prices the cell against the per-device budget (platform table or
+    ``--hbm-gib`` override) and raises :class:`PlanMemoryError` (a
+    ``ValueError``) with the footprint table instead of letting the step
+    OOM minutes into compilation — the planner's resource-governed refusal
+    applied at the launch surface.  (``main()`` converts exactly this
+    error to a clean exit; programmatic ``run()`` callers get a catchable
+    exception, not SystemExit, and other ValueErrors keep their
+    tracebacks.)
+    """
+    budget = mem_mod.budget_for(mesh, hbm_gib=hbm_gib)
+    fps = mem_mod.footprints_for_mesh(
+        cfg, mesh, global_batch=batch, seq_len=seq,
+        num_microbatches=microbatches, schedule=schedule)
+    if not all(f.fits(budget) for f in fps):
+        table = mem_mod.footprint_table(fps, budget)
+        raise PlanMemoryError(
+            f"plan does not fit the per-device memory budget "
+            f"({budget.describe()}); refusing to launch.\n{table}\n"
+            "Raise --hbm-gib, add pipeline stages (--pp), or increase "
+            "--microbatches.")
+    peak = mem_mod.peak_stage_footprint(fps)
+    print(f"memory model: predicted peak {peak.total / mem_mod.GIB:.3f} "
+          f"GiB/device vs {budget.describe()} -> fits")
+
+
 def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
         scale_down: int = 64, lr: float = 3e-3, microbatches: int = 1,
         ckpt_dir: Optional[str] = None, ckpt_every: int = 25,
         resume: bool = False, mesh=None, log_every: int = 10,
         seed: int = 0, comms: str = "auto", pp: int = 1,
-        pp_schedule: str = "gpipe"):
+        pp_schedule: str = "gpipe", hbm_gib: Optional[float] = None):
     cfg = scale_config(get_config(arch), scale_down)
     mesh = mesh or mesh_mod.make_host_mesh(pp)
     plan = plan_for(cfg, mesh)
+    validate_plan_memory(cfg, mesh, batch=batch, seq=seq,
+                         microbatches=microbatches, schedule=pp_schedule,
+                         hbm_gib=hbm_gib)
     model = Model(cfg, mesh, plan, q_chunk=64, kv_chunk=128, ssd_chunk=32)
     pipelined = mesh.shape.get("pipe", 1) > 1
 
@@ -184,12 +223,19 @@ def main():
                     help="pipeline-parallel degree (adds a 'pipe' mesh axis)")
     ap.add_argument("--pp-schedule", choices=["gpipe", "1f1b"],
                     default="gpipe")
+    ap.add_argument("--hbm-gib", type=float, default=None,
+                    help="per-device HBM budget in GiB for the fail-fast "
+                         "memory check (default: platform table)")
     args = ap.parse_args()
-    losses = run(args.arch, steps=args.steps, batch=args.batch,
-                 seq=args.seq, scale_down=args.scale_down, lr=args.lr,
-                 microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
-                 resume=args.resume, seed=args.seed, comms=args.comms,
-                 pp=args.pp, pp_schedule=args.pp_schedule)
+    try:
+        losses = run(args.arch, steps=args.steps, batch=args.batch,
+                     seq=args.seq, scale_down=args.scale_down, lr=args.lr,
+                     microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
+                     resume=args.resume, seed=args.seed, comms=args.comms,
+                     pp=args.pp, pp_schedule=args.pp_schedule,
+                     hbm_gib=args.hbm_gib)
+    except PlanMemoryError as e:     # plan validation: clean exit, no trace
+        raise SystemExit(str(e))
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
 
 

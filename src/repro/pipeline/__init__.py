@@ -22,7 +22,8 @@ accept a ``--pp`` degree.
 
 from . import costs, partition, schedule, spec
 from .costs import (boundary_act_bytes, boundary_wire_bytes,
-                    bubble_fraction, pipeline_step_seconds)
+                    bubble_fraction, in_flight_microbatches,
+                    min_stash_slots, pipeline_step_seconds)
 from .partition import StagePartition, partition_layers, partition_model
 from .schedule import SCHEDULE_FNS, gpipe_grads, gpipe_loss, one_f_one_b_grads
 from .spec import (PipelineSpec, pipeline_init_state, pipeline_param_specs,
@@ -34,7 +35,7 @@ __all__ = [
     "PipelineSpec", "StagePartition",
     "partition_layers", "partition_model",
     "bubble_fraction", "boundary_act_bytes", "boundary_wire_bytes",
-    "pipeline_step_seconds",
+    "pipeline_step_seconds", "in_flight_microbatches", "min_stash_slots",
     "gpipe_loss", "gpipe_grads", "one_f_one_b_grads", "SCHEDULE_FNS",
     "pipeline_param_specs", "pipeline_state_specs",
     "pipeline_state_shardings", "pipeline_state_sds",

@@ -35,6 +35,41 @@ def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
     return (n_stages - 1) / (m + n_stages - 1)
 
 
+def min_stash_slots(n_stages: int, n_microbatches: int) -> int:
+    """Stage-input slots the explicit 1F1B ring buffer needs: min(M, 2S-1).
+
+    The tick-parallel 1F1B in ``schedule.py`` runs one forward and one
+    backward slot per tick, so stage s forwards microbatch m at tick m + s
+    and backs it at tick m + 2(S-1) - s: the stage's input must stay live
+    for 2(S-1) - 2s intervening forwards.  The worst stage (s = 0) needs
+    2(S-1) + 1 slots; fewer than M microbatches can ever be live.  (The
+    classic throttled 1F1B bound is min(M, S) — reaching it in SPMD would
+    double the tick count, trading compiled step work for stash.)
+    """
+    if n_stages <= 1:
+        return 1
+    return min(max(1, n_microbatches), 2 * n_stages - 1)
+
+
+def in_flight_microbatches(schedule: Optional[str], n_stages: int,
+                           n_microbatches: int) -> int:
+    """Microbatches whose activations a stage keeps live at peak.
+
+    GPipe stashes every forward until the all-backwards phase (the scan
+    transpose replays all M); the explicit 1F1B stashes only stage
+    *inputs* (the ring) and recomputes one microbatch's body per backward
+    slot, so its per-layer activation term is a single microbatch.
+    """
+    m = max(1, n_microbatches)
+    if n_stages <= 1 or schedule is None:
+        return 1
+    if schedule == "gpipe":
+        return m
+    if schedule == "1f1b":
+        return 1
+    raise ValueError(f"unknown pipeline schedule {schedule!r}")
+
+
 def boundary_act_bytes(microbatch: int, seq_len: int, d_model: int,
                        itemsize: int = 2) -> int:
     """Bytes of ONE microbatch's residual-stream activation block — the

@@ -22,13 +22,23 @@ microbatch), different dependency structure:
   ppermute each tick.
 
 SPMD note: every stage executes the same traced program — stage identity
-is ``axis_index``, edge work (embed / LM head) is computed everywhere and
-masked, so no per-stage control flow exists for the partitioner to choke
-on.  The pipe axis must be *fully manual* (ppermute placement), which
-restricts the executable path to DP x PP cells: every non-batch,
-non-pipe mesh axis must have size 1 (the same restriction as the explicit
-comms path in ``train/step.py``; TP composes at the cost-model level in
+is ``axis_index``.  Edge work (embed / LM head + loss) sits behind a
+``lax.cond`` on that identity: the traced program still contains both
+branches (so the SPMD partitioner sees uniform code), but at runtime an
+interior stage takes the empty branch and never materializes the fp32
+(B_mb, S, V) logits block or its cotangent — the term that dominated every
+stage's peak when the head was compute-everywhere-and-mask.  The pipe axis
+must be *fully manual* (ppermute placement), which restricts the
+executable path to DP x PP cells: every non-batch, non-pipe mesh axis must
+have size 1 (the same restriction as the explicit comms path in
+``train/step.py``; TP composes at the cost-model level in
 ``core/planner.py``).
+
+Memory note: the explicit 1F1B stashes stage inputs in a ring buffer of
+``costs.min_stash_slots(S, M) = min(M, 2S-1)`` slots (slot = microbatch
+index mod ring) instead of the historical all-M stash — 1F1B's memory win
+realized.  ``PipelineSpec.stash_slots`` can widen the ring up to M for A/B
+measurements; ``core/memory.py`` prices both.
 """
 
 from __future__ import annotations
@@ -76,23 +86,36 @@ def _make_stage_fn(model):
     """Returns stage_fn(params, x_in, mb, is_first, is_last, win_local)
     -> (x_out, lm_loss, aux, denom).
 
-    Every stage traces the same ops (SPMD): embed and head run everywhere
-    and the masks select which result is real.  ``lm_loss`` is pre-masked
-    by ``is_last`` so downstream cotangents vanish on interior stages.
+    Every stage traces the same program (SPMD) but the edge work is gated
+    behind ``lax.cond`` on the stage identity: only the first stage runs
+    the embedding gather, and only the last stage materializes the fp32
+    logits + loss (interior stages take the zero branch at runtime, so the
+    (B_mb, S, V) block never allocates there).  ``lm_loss`` comes out of
+    the cond already zero on interior stages, so downstream cotangents
+    vanish exactly as the old is_last mask made them.
     """
     cfg = model.cfg
 
     def stage_fn(params, x_in, mb, is_first, is_last, win_local):
-        emb = layers.embed(mb["tokens"], params["embed"],
-                           scale=cfg.emb_scale).astype(jnp.bfloat16)
-        x = jnp.where(is_first, emb, x_in)
+        x = jax.lax.cond(
+            is_first,
+            lambda xi: layers.embed(mb["tokens"], params["embed"],
+                                    scale=cfg.emb_scale).astype(jnp.bfloat16),
+            lambda xi: xi,
+            x_in)
         x, aux = _stage_apply(model, params["layers"], x, win_local)
-        h = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = layers.unembed(h, params["unembed"], policy=model.policy)
-        lm, denom = layers.lm_loss(logits, mb["labels"],
-                                   vocab_real=cfg.vocab_size)
-        mask = is_last.astype(jnp.float32)
-        return x, lm * mask, aux, denom * mask
+
+        def head(h_in):
+            h = layers.rms_norm(h_in, params["final_norm"], cfg.norm_eps)
+            logits = layers.unembed(h, params["unembed"],
+                                    policy=model.policy)
+            return layers.lm_loss(logits, mb["labels"],
+                                  vocab_real=cfg.vocab_size)
+
+        zero = jnp.zeros((), jnp.float32)
+        lm, denom = jax.lax.cond(is_last, head,
+                                 lambda h_in: (zero, zero), x)
+        return x, lm, aux, denom
 
     return stage_fn
 
@@ -213,6 +236,13 @@ def one_f_one_b_grads(model, spec: PipelineSpec, params, batch):
     (boundary remat), so per-stage live activations stay O(in-flight)
     rather than O(M) residuals.
 
+    The stash is a ring buffer of ``spec.resolved_stash_slots()`` slots
+    (default min(M, 2S-1), the eager-schedule in-flight bound — see
+    ``costs.min_stash_slots``), indexed by microbatch mod ring: microbatch
+    m's input is written at its forward tick m + s and last read at its
+    backward tick m + 2(S-1) - s, a span covering 2(S-1) - 2s newer
+    forwards, so a 2S-1 ring can never overwrite a live slot.
+
     Numerics match :func:`gpipe_grads` exactly up to summation order: the
     per-microbatch math is identical, only the schedule differs.
     """
@@ -228,7 +258,8 @@ def one_f_one_b_grads(model, spec: PipelineSpec, params, batch):
     act_shape = (b_mb, seq_len, cfg.d_model)
     act_recv = jnp.zeros(act_shape, jnp.bfloat16)
     cot_recv = jnp.zeros(act_shape, jnp.bfloat16)
-    stash = jnp.zeros((M,) + act_shape, jnp.bfloat16)
+    n_slots = spec.resolved_stash_slots()
+    stash = jnp.zeros((n_slots,) + act_shape, jnp.bfloat16)
     gacc = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     zero = jnp.zeros((), jnp.float32)
     lm_acc, aux_acc, den_acc = zero, zero, zero
@@ -247,9 +278,10 @@ def one_f_one_b_grads(model, spec: PipelineSpec, params, batch):
         lm_acc = lm_acc + fvalid * lm
         aux_acc = aux_acc + fvalid * aux
         den_acc = den_acc + fvalid * den
-        cur = jax.lax.dynamic_index_in_dim(stash, mbi, 0, keepdims=True)
+        slot_f = mbi % n_slots
+        cur = jax.lax.dynamic_index_in_dim(stash, slot_f, 0, keepdims=True)
         stash = jax.lax.dynamic_update_index_in_dim(
-            stash, jnp.where(fvalid > 0, act_recv[None], cur), mbi, 0)
+            stash, jnp.where(fvalid > 0, act_recv[None], cur), slot_f, 0)
         act_recv = jax.lax.ppermute(out, spec.axis, down)
 
         # ---- backward slot: microbatch t - 2(S-1) + s ------------------
@@ -259,7 +291,7 @@ def one_f_one_b_grads(model, spec: PipelineSpec, params, batch):
         bvalid = ((mbw >= 0) & (mbw < M)).astype(jnp.float32)
         mbi_b = jnp.clip(mbw, 0, M - 1)
         mb_b = _take_mb(mbs, mbi_b)
-        x_in_b = jax.lax.dynamic_index_in_dim(stash, mbi_b, 0,
+        x_in_b = jax.lax.dynamic_index_in_dim(stash, mbi_b % n_slots, 0,
                                               keepdims=False)
 
         def fwd(p, x):

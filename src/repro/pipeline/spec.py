@@ -10,7 +10,7 @@ axis so jit/checkpoint/optimizer all see pipeline-sharded state.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 
@@ -29,6 +29,10 @@ class PipelineSpec:
     schedule: str = "gpipe"              # gpipe | 1f1b
     num_microbatches: int = 4
     boundaries: Tuple[int, ...] = ()     # from partition.StagePartition
+    # 1F1B stage-input ring size; None = the minimal min(M, 2S-1) ring
+    # (costs.min_stash_slots).  Settable up to M for A/B memory
+    # measurements against the historical all-M stash.
+    stash_slots: Optional[int] = None
 
     def __post_init__(self):
         if self.schedule not in SCHEDULES:
@@ -36,6 +40,18 @@ class PipelineSpec:
                              f"expected one of {SCHEDULES}")
         if self.num_microbatches < 1:
             raise ValueError("num_microbatches must be >= 1")
+        if self.stash_slots is not None:
+            lo = costs.min_stash_slots(self.n_stages, self.num_microbatches)
+            if not lo <= self.stash_slots <= max(lo, self.num_microbatches):
+                raise ValueError(
+                    f"stash_slots={self.stash_slots} outside "
+                    f"[{lo}, {max(lo, self.num_microbatches)}] for "
+                    f"S={self.n_stages}, M={self.num_microbatches}")
+
+    def resolved_stash_slots(self) -> int:
+        """Ring-buffer size the 1F1B schedule will allocate."""
+        return self.stash_slots or costs.min_stash_slots(
+            self.n_stages, self.num_microbatches)
 
     def bubble_fraction(self) -> float:
         return costs.bubble_fraction(self.n_stages, self.num_microbatches)

@@ -1,0 +1,27 @@
+"""Collection-time launch of the fake-multi-device child suites.
+
+See ``_childsuite.py``: starting the child pytest processes as soon as
+collection finishes lets their compiles run while the parent works through
+its serial tests, instead of blocking on each ``subprocess.run`` in turn.
+
+Launches are gated on the *joining* parent test being in the selected item
+list (pytest's -k/-m deselection hook runs first), so filtered runs and
+``--collect-only`` never spawn a child nobody waits for.  Inside a child
+(marker env var set) nothing is launched — the guard in
+``_childsuite.launch`` prevents recursion.
+"""
+
+import pytest
+
+import _childsuite
+
+
+@pytest.hookimpl(trylast=True)
+def pytest_collection_modifyitems(config, items):
+    # trylast: run AFTER the -k/-m deselection hook has filtered `items`,
+    # so only children some selected test will join are launched
+    if _childsuite.in_any_child() or config.option.collectonly:
+        return
+    markexpr = getattr(config.option, "markexpr", None)
+    for item in items:
+        _childsuite.launch_for_item(item.name, markexpr=markexpr)

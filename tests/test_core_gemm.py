@@ -6,8 +6,6 @@ a single device (per the project rule: only the dry-run forces 512).
 """
 
 import os
-import subprocess
-import sys
 
 import pytest
 
@@ -19,20 +17,12 @@ def _in_child() -> bool:
 
 
 if not _in_child():
-    # Parent: run this file in a child with 8 fake devices, report result.
+    # Parent: join the child launched at collection time (_childsuite).
     def test_gemm_suite_subprocess():
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                            + f" --xla_force_host_platform_device_count={DEVS}")
-        env["REPRO_FAKE_DEVICES"] = str(DEVS)
-        env["PYTHONPATH"] = os.pathsep.join(
-            [os.path.join(os.path.dirname(__file__), "..", "src")]
-            + env.get("PYTHONPATH", "").split(os.pathsep))
-        r = subprocess.run(
-            [sys.executable, "-m", "pytest", "-q", "-x", __file__],
-            env=env, capture_output=True, text=True, timeout=900)
-        if r.returncode != 0:
-            pytest.fail("child failed:\n" + r.stdout[-4000:] + r.stderr[-4000:])
+        import _childsuite
+        rc, out = _childsuite.join("test_core_gemm.py")
+        if rc != 0:
+            pytest.fail("child failed:\n" + out)
 else:
     import jax
     import jax.numpy as jnp

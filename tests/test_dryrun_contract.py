@@ -2,34 +2,28 @@
 real 512-device production mesh in a subprocess (keeps this process at 1
 device per the project rule).  The full 64-cell sweep is the deliverable
 run via ``python -m repro.launch.dryrun --all --both-meshes``.
+
+The cell subprocesses start at collection time (``conftest.py`` ->
+``_childsuite.launch_dryrun_cells``) so their compiles overlap the serial
+parent tests; each test here only joins and asserts.
 """
 
+import glob
+import json
 import os
-import subprocess
-import sys
 
 import pytest
 
+import _childsuite
 
-@pytest.mark.parametrize("arch,shape,multi", [
-    ("qwen2-0.5b", "decode_32k", False),
-    ("mamba2-780m", "long_500k", True),
-])
-def test_dryrun_cell_compiles(arch, shape, multi, tmp_path):
-    env = dict(os.environ)
-    root = os.path.join(os.path.dirname(__file__), "..")
-    env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(root, "src")] + env.get("PYTHONPATH", "").split(os.pathsep))
-    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
-           "--shape", shape, "--out", str(tmp_path)]
-    if multi:
-        cmd.append("--multi-pod")
-    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
-                       timeout=600, cwd=root)
-    assert "ALL DRY-RUN CELLS PASSED" in r.stdout, \
-        r.stdout[-2000:] + r.stderr[-2000:]
-    import json, glob
-    js = glob.glob(str(tmp_path / "*.json"))
+
+@pytest.mark.parametrize("arch,shape,multi", _childsuite.DRYRUN_CELLS)
+def test_dryrun_cell_compiles(arch, shape, multi):
+    key = f"dryrun_{arch}_{shape}"
+    _childsuite.launch_dryrun_cells(only=f"{arch}-{shape}")  # standalone path
+    rc, out = _childsuite.join_cmd(key, timeout=600)
+    assert "ALL DRY-RUN CELLS PASSED" in out, out[-2000:]
+    js = glob.glob(os.path.join(_childsuite.dryrun_outdir(key), "*.json"))
     assert js, "no dry-run artifact written"
     res = json.load(open(js[0]))
     # the contract: it fits and reports the roofline inputs

@@ -8,8 +8,6 @@ is the exhaustive sweep the dispatcher's docstring promises).
 """
 
 import os
-import subprocess
-import sys
 
 import pytest
 
@@ -22,18 +20,10 @@ def _in_child() -> bool:
 
 if not _in_child():
     def test_gemm_conformance_subprocess():
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                            + f" --xla_force_host_platform_device_count={DEVS}")
-        env["REPRO_GEMM_CONF_DEVICES"] = str(DEVS)
-        env["PYTHONPATH"] = os.pathsep.join(
-            [os.path.join(os.path.dirname(__file__), "..", "src")]
-            + env.get("PYTHONPATH", "").split(os.pathsep))
-        r = subprocess.run(
-            [sys.executable, "-m", "pytest", "-q", "-x", __file__],
-            env=env, capture_output=True, text=True, timeout=900)
-        if r.returncode != 0:
-            pytest.fail("child failed:\n" + r.stdout[-4000:] + r.stderr[-4000:])
+        import _childsuite
+        rc, out = _childsuite.join("test_gemm_conformance.py")
+        if rc != 0:
+            pytest.fail("child failed:\n" + out)
 else:
     import itertools
 

@@ -1,0 +1,253 @@
+"""Memory-governed planning: footprint model, budgets, planner refusal.
+
+Parent-process tests are pure Python (budget table, per-stage footprint
+shape, planner OOM refusal on a documented over-budget config).  The
+measured battery runs in a child with 8 fake host devices (same pattern as
+test_pipeline.py): the per-stage prediction must land within a stated
+tolerance of ``jit(...).lower().compile().memory_analysis()``, and the
+1F1B ring-buffer stash must compile to a strictly lower peak than the
+historical all-M stash (the acceptance measurement; the loss-equivalence
+side — ring-buffer 1F1B still matching the single-stage reference — is
+pinned by test_pipeline.py, whose 1f1b cell uses the ring by default).
+"""
+
+import os
+
+import pytest
+
+DEVS = 8
+
+
+def _in_child() -> bool:
+    return os.environ.get("REPRO_MEM_FAKE_DEVICES") == str(DEVS)
+
+
+if not _in_child():
+    from repro.configs import get_config
+    from repro.core import memory as mem
+    from repro.core.planner import best_hybrid, score_hybrid_candidates
+    from repro.pipeline import costs as pipe_costs
+    from repro.pipeline.spec import PipelineSpec
+
+    # ---- budgets --------------------------------------------------------
+    def test_budget_table_and_overrides():
+        v5e = mem.budget_for(platform="v5e")
+        assert v5e.hbm_bytes == 16 * mem.GIB and v5e.platform == "v5e"
+        assert mem.budget_for(platform="v5p").hbm_bytes == 95 * mem.GIB
+        assert mem.budget_for(platform="h100").hbm_bytes == 80 * mem.GIB
+        # --hbm-gib override wins over everything
+        b = mem.budget_for(platform="v5e", hbm_gib=32)
+        assert b.hbm_bytes == 32 * mem.GIB
+        # unknown platform falls back to the default
+        assert mem.budget_for(platform="nope").platform == "v5e"
+
+    def test_headroom_single_source_of_truth():
+        """The ISSUE bug: two call sites applied different headroom
+        constants.  Now headroom exists only on MemoryBudget — fits() takes
+        no headroom argument and raw byte budgets get the default."""
+        b = mem.MemoryBudget(10 * mem.GIB, headroom=0.5)
+        f = mem.Footprint(params=6 * mem.GIB)
+        assert not f.fits(b)                      # 6 > 10 * 0.5
+        assert f.fits(mem.MemoryBudget(10 * mem.GIB, headroom=0.7))
+        # int budgets wrap with the single default headroom
+        assert f.fits(int(7 * mem.GIB)) == (6 * mem.GIB <= 7 * mem.GIB
+                                            * mem.DEFAULT_HEADROOM)
+        with pytest.raises(TypeError):
+            f.fits(b, headroom=0.99)              # no second knob anymore
+
+    def test_device_kind_selects_cpu_budget():
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1, 1), ("data", "model"))
+        assert mem.budget_for(mesh).platform == "cpu"
+
+    # ---- per-stage footprint shape --------------------------------------
+    def test_stage_footprint_schedule_terms():
+        cfg = get_config("qwen2-0.5b")
+        kw = dict(local_batch=8, seq_len=512, n_stages=4,
+                  num_microbatches=8, zero_shards=2)
+        gp = mem.estimate_stage_footprints(cfg, schedule="gpipe", **kw)
+        ob = mem.estimate_stage_footprints(cfg, schedule="1f1b", **kw)
+        assert len(gp) == len(ob) == 4
+        # GPipe stashes all M microbatches' layer activations; 1F1B
+        # recomputes (one in flight) + the ring stash
+        assert gp[0].activations > ob[0].activations
+        assert ob[0].stash == pipe_costs.min_stash_slots(4, 8) * (
+            (8 // 8) * 512 * cfg.d_model * 2)
+        # edge gating: interior 1F1B stages pay no logits, the last does;
+        # GPipe's tick-scan residuals put logits on EVERY stage
+        assert ob[0].logits == 0 and ob[-1].logits > 0
+        assert gp[0].logits == gp[-1].logits > 0
+        # stage weights at 1/S of layers + resident edge params: interior
+        # stages of the two schedules agree on the static categories
+        assert gp[1].params == ob[1].params
+        assert gp[1].optimizer == ob[1].optimizer
+
+    def test_in_flight_and_ring_formulas():
+        assert pipe_costs.in_flight_microbatches(None, 1, 8) == 1
+        assert pipe_costs.in_flight_microbatches("gpipe", 4, 8) == 8
+        assert pipe_costs.in_flight_microbatches("1f1b", 4, 8) == 1
+        assert pipe_costs.min_stash_slots(2, 8) == 3       # 2S-1
+        assert pipe_costs.min_stash_slots(4, 2) == 2       # M < 2S-1
+        assert pipe_costs.min_stash_slots(1, 8) == 1
+
+    def test_pipeline_spec_stash_slot_validation():
+        PipelineSpec(n_stages=2, num_microbatches=8, stash_slots=8)
+        s = PipelineSpec(n_stages=2, num_microbatches=8)
+        assert s.resolved_stash_slots() == 3
+        with pytest.raises(ValueError):
+            PipelineSpec(n_stages=2, num_microbatches=8, stash_slots=2)
+        with pytest.raises(ValueError):
+            PipelineSpec(n_stages=2, num_microbatches=8, stash_slots=9)
+
+    # ---- planner refusal -------------------------------------------------
+    # The documented over-budget config: qwen2-0.5b train-shaped cell on 8
+    # devices at seq 4096 under an 8 GiB budget.  The fp32 edge optimizer/
+    # gradient state plus logits put the dp=8 pure-DP cell at ~7.3 GiB
+    # predicted — over the 7.2 GiB usable line — while (dp=4, tp=2) fits.
+    OVER_BUDGET = dict(global_batch=32, seq_len=4096, schedule="1f1b",
+                       hbm_budget=mem.MemoryBudget(8 * mem.GIB,
+                                                   platform="test-8gib"))
+
+    def test_planner_refuses_over_budget_candidates():
+        cfg = get_config("qwen2-0.5b")
+        scores, refused = score_hybrid_candidates(
+            cfg, 8, return_refused=True, **OVER_BUDGET)
+        assert scores, "some candidate must still fit"
+        assert refused, "some candidate must be refused"
+        assert (8, 1, 1, 4) in refused, refused
+        assert "peak stage" in refused[(8, 1, 1, 4)]
+        # refused candidates never appear in the scores
+        assert all((dp, tp, pp) not in scores
+                   for (dp, tp, pp, _m) in refused)
+
+    def test_best_hybrid_rejects_oom_and_picks_fitting_plan():
+        cfg = get_config("qwen2-0.5b")
+        best = best_hybrid(cfg, 8, **OVER_BUDGET)
+        scores, refused = score_hybrid_candidates(
+            cfg, 8, return_refused=True, **OVER_BUDGET)
+        assert best in scores
+        assert (best[0], best[1], best[2], 4) not in refused
+
+    def test_best_hybrid_raises_when_nothing_fits():
+        cfg = get_config("qwen2-0.5b")
+        with pytest.raises(ValueError, match="refused by the memory model"):
+            best_hybrid(cfg, 8, global_batch=32, seq_len=4096,
+                        hbm_budget=mem.MemoryBudget(1 * mem.GIB))
+
+    def test_unbudgeted_scoring_unchanged():
+        cfg = get_config("qwen2-0.5b")
+        s_off = score_hybrid_candidates(cfg, 8, global_batch=32,
+                                        seq_len=1024, check_memory=False)
+        s_big = score_hybrid_candidates(
+            cfg, 8, global_batch=32, seq_len=1024,
+            hbm_budget=mem.MemoryBudget(1024 * mem.GIB))
+        assert set(s_off) == set(s_big)
+
+    # ---- the measured battery, in a child with 8 fake devices -----------
+    def test_memory_model_suite_subprocess():
+        import _childsuite
+        rc, out = _childsuite.join("test_memory_model.py", timeout=600)
+        if rc != 0:
+            pytest.fail("child failed:\n" + out)
+
+else:
+    import dataclasses
+    import functools
+
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.configs.base import ModelConfig
+    from repro.core import memory as mem
+    from repro.core.planner import plan_for
+    from repro.models import Model
+    from repro.pipeline import pipeline_state_sds, pipeline_state_shardings
+    from repro.train import AdamWConfig, build_pipeline_train_step
+
+    # benchmarks/memory_model_bench.py geometry: on anything smaller the
+    # ring/all-M stash difference stops being the peak-setting buffer and
+    # the measured delta degenerates to zero.  M=4 keeps the ring under M
+    # (wraparound exercised: slots = min(M, 2S-1) = 3) at ~60% of the
+    # M=8 cell's compile time (the unrolled 1F1B graph scales with ticks).
+    TINY = ModelConfig(name="mem-tiny", family="dense", n_layers=4,
+                       d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                       d_ff=128, vocab_size=128)
+    B, SEQ, M = 16, 32, 4
+    DP = 2
+
+    #: stated tolerance for predicted/measured on the tiny CPU cell: the
+    #: model carries no per-executable constants (rng state, metrics,
+    #: infeed, XLA slop), which dominate at KB scale, so the band is wide;
+    #: the production-mesh dry-run lands ~0.85 (see README).
+    RATIO_LO, RATIO_HI = 0.2, 5.0
+
+    _peak = mem.compiled_peak_bytes       # the shared measured-side formula
+
+    @functools.lru_cache(maxsize=None)
+    def _compile_1f1b(stash_slots=None):
+        devs = np.array(jax.devices()[:4]).reshape(DP, 2, 1)
+        mesh = Mesh(devs, ("data", "pipe", "model"))
+        adamw = AdamWConfig(lr=1e-3, weight_decay=0.0)
+        with jax.set_mesh(mesh):
+            plan = plan_for(TINY, mesh)
+            spec = dataclasses.replace(plan.pipeline, schedule="1f1b",
+                                       num_microbatches=M,
+                                       stash_slots=stash_slots)
+            model = Model(TINY, mesh, plan, q_chunk=16, kv_chunk=16)
+            ts = build_pipeline_train_step(model, mesh, adamw, pipeline=spec)
+            tok = jax.ShapeDtypeStruct((B, SEQ), np.int32)
+            sds = pipeline_state_sds(model, mesh, spec, adamw)
+            sh = pipeline_state_shardings(model, mesh, spec, adamw)
+            compiled = jax.jit(ts, in_shardings=(sh, None),
+                               donate_argnums=(0,)).lower(
+                sds, {"tokens": tok, "labels": tok}).compile()
+        return spec, compiled
+
+    def test_prediction_within_tolerance_of_memory_analysis():
+        spec, compiled = _compile_1f1b()
+        pred = mem.peak_stage_footprint(mem.estimate_stage_footprints(
+            TINY, local_batch=B // DP, seq_len=SEQ, n_stages=2,
+            num_microbatches=M, schedule="1f1b", zero_shards=DP)).total
+        meas = _peak(compiled)
+        assert RATIO_LO < pred / meas < RATIO_HI, (pred, meas)
+
+    def test_ring_buffer_peak_below_all_m_stash():
+        """THE acceptance measurement: min(M, 2S-1) ring vs all-M stash."""
+        spec_ring, c_ring = _compile_1f1b()
+        spec_allm, c_allm = _compile_1f1b(stash_slots=M)
+        assert spec_ring.resolved_stash_slots() == 3
+        assert spec_allm.resolved_stash_slots() == M
+        peak_ring, peak_allm = _peak(c_ring), _peak(c_allm)
+        assert peak_ring < peak_allm, (peak_ring, peak_allm)
+        # the delta is at least the freed slots' bytes (bf16 act blocks)
+        freed = (M - 3) * max(1, B // DP // M) * SEQ * TINY.d_model * 2
+        assert peak_allm - peak_ring >= freed, (peak_allm, peak_ring, freed)
+
+    def test_ring_wraparound_matches_all_m_stash_numerics():
+        """M=4 > ring=3 exercises slot reuse: the ring run must reproduce
+        the all-M stash run exactly (same math, smaller buffer).  This is
+        the wraparound case the M=2 equivalence battery cannot reach."""
+        from repro.pipeline import pipeline_init_state
+
+        (spec_ring, c_ring), (_, c_allm) = (_compile_1f1b(),
+                                            _compile_1f1b(stash_slots=M))
+        devs = np.array(jax.devices()[:4]).reshape(DP, 2, 1)
+        mesh = Mesh(devs, ("data", "pipe", "model"))
+        rng = np.random.RandomState(0)
+        toks = rng.randint(0, TINY.vocab_size, (B, SEQ + 1)).astype(np.int32)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        with jax.set_mesh(mesh):
+            plan = plan_for(TINY, mesh)
+            model = Model(TINY, mesh, plan, q_chunk=16, kv_chunk=16)
+            losses = {}
+            for name, compiled in (("ring", c_ring), ("allm", c_allm)):
+                state = pipeline_init_state(model, mesh, spec_ring,
+                                            jax.random.PRNGKey(0))
+                traj = []
+                for _ in range(2):
+                    state, metrics = compiled(state, batch)
+                    traj.append(float(metrics["loss"]))
+                losses[name] = traj
+        np.testing.assert_allclose(losses["ring"], losses["allm"],
+                                   rtol=1e-6, atol=1e-6)

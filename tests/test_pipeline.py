@@ -1,18 +1,23 @@
 """Pipeline-parallel equivalence + partitioner/cost-model unit tests.
 
 The equivalence battery runs in a child process with 8 fake host devices
-(same pattern as test_core_gemm.py): PP=2 and the PP=2 x DP=2 hybrid train
-step must match the single-stage ``build_train_step`` baseline — same
-loss trajectory, same first-step gradient norm — and the two schedules
+(same pattern as test_core_gemm.py): the PP=2 x DP=2 hybrid train step
+must match the single-stage ``build_train_step`` baseline — same loss
+trajectory, same first-step gradient norm — and the two schedules
 (gpipe / 1f1b) must match each other tightly.
+
+Wall-time discipline: every child test draws its trajectories from the
+memoized ``_baseline`` / ``_pipelined`` cells, so the default battery
+compiles exactly THREE programs (the dp=2 baseline and the dp=2 x pp=2
+cell under each schedule).  The additional cells — pure PP=2, PP=4 depth,
+and the comms-path composition — are marked ``slow`` (CI's
+``-m "slow or not slow"`` reaches the child via the forwarded markexpr).
 
 The partitioner / cost-model / planner-scoring tests are pure Python and
 run in the parent process.
 """
 
 import os
-import subprocess
-import sys
 
 import pytest
 
@@ -133,18 +138,10 @@ if not _in_child():
 
     # ---- the equivalence battery, in a child with 8 fake devices --------
     def test_pipeline_suite_subprocess():
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                            + f" --xla_force_host_platform_device_count={DEVS}")
-        env["REPRO_PIPE_FAKE_DEVICES"] = str(DEVS)
-        env["PYTHONPATH"] = os.pathsep.join(
-            [os.path.join(os.path.dirname(__file__), "..", "src")]
-            + env.get("PYTHONPATH", "").split(os.pathsep))
-        r = subprocess.run(
-            [sys.executable, "-m", "pytest", "-q", "-x", __file__],
-            env=env, capture_output=True, text=True, timeout=900)
-        if r.returncode != 0:
-            pytest.fail("child failed:\n" + r.stdout[-4000:] + r.stderr[-4000:])
+        import _childsuite
+        rc, out = _childsuite.join("test_pipeline.py", timeout=900)
+        if rc != 0:
+            pytest.fail("child failed:\n" + out)
 
 else:
     import dataclasses
@@ -167,7 +164,7 @@ else:
                        d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
                        d_ff=64, vocab_size=64)
     B, SEQ, MB = 8, 16, 2
-    STEPS = 3
+    STEPS = 2
 
     def _batch():
         rng = np.random.RandomState(0)
@@ -224,9 +221,10 @@ else:
                     gnorm0 = float(m["grad_norm"])
         return losses, gnorm0
 
+    @pytest.mark.slow
     def test_pp2_matches_single_stage_baseline():
-        # dp=2 baseline computes the same global math (GSPMD), so one
-        # memoized baseline serves every cell in this battery
+        # pure-PP cell (extra compile; the default battery covers PP
+        # through the dp=2 x pp=2 hybrid against the same baseline)
         base, gnorm_b = _baseline(dp=2)
         pipe, gnorm_p = _pipelined(dp=1, pp=2, schedule="gpipe")
         np.testing.assert_allclose(pipe, base, rtol=2e-2, atol=2e-2)
@@ -249,6 +247,7 @@ else:
         np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
         np.testing.assert_allclose(ga, gb, rtol=1e-2)
 
+    @pytest.mark.slow
     def test_pipeline_composes_with_comms_grad_sync():
         """DP sync through the PR-1 explicit comms path (ring schedule)."""
         base, _ = _baseline(dp=2)
@@ -256,6 +255,7 @@ else:
         pipe, _ = _pipelined(dp=2, pp=2, schedule="gpipe", comms=comms)
         np.testing.assert_allclose(pipe, base, rtol=2e-2, atol=2e-2)
 
+    @pytest.mark.slow
     def test_pp4_deeper_pipeline_matches():
         base, _ = _baseline(dp=2)
         pipe, _ = _pipelined(dp=1, pp=4, schedule="gpipe")

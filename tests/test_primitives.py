@@ -2,8 +2,6 @@
 halo-exchange distributed convolution (§1's kernel list)."""
 
 import os
-import subprocess
-import sys
 
 import pytest
 
@@ -16,19 +14,10 @@ def _in_child() -> bool:
 
 if not _in_child():
     def test_primitives_subprocess():
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                            + f" --xla_force_host_platform_device_count={DEVS}")
-        env["REPRO_PRIM_CHILD"] = str(DEVS)
-        env["PYTHONPATH"] = os.pathsep.join(
-            [os.path.join(os.path.dirname(__file__), "..", "src")]
-            + env.get("PYTHONPATH", "").split(os.pathsep))
-        r = subprocess.run(
-            [sys.executable, "-m", "pytest", "-q", "-x", __file__],
-            env=env, capture_output=True, text=True, timeout=900)
-        if r.returncode != 0:
-            pytest.fail("child failed:\n" + r.stdout[-3000:]
-                        + r.stderr[-2000:])
+        import _childsuite
+        rc, out = _childsuite.join("test_primitives.py")
+        if rc != 0:
+            pytest.fail("child failed:\n" + out)
 else:
     import jax
     import jax.numpy as jnp

@@ -10,8 +10,6 @@ choice and old XLA versions reorder the convert).  The production
 
 import os
 import re
-import subprocess
-import sys
 
 import pytest
 
@@ -24,19 +22,10 @@ def _in_child() -> bool:
 
 if not _in_child():
     def test_redistribute_dtype_subprocess():
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                            + f" --xla_force_host_platform_device_count={DEVS}")
-        env["REPRO_REDIST_CHILD"] = str(DEVS)
-        env["PYTHONPATH"] = os.pathsep.join(
-            [os.path.join(os.path.dirname(__file__), "..", "src")]
-            + env.get("PYTHONPATH", "").split(os.pathsep))
-        r = subprocess.run(
-            [sys.executable, "-m", "pytest", "-q", "-x", __file__],
-            env=env, capture_output=True, text=True, timeout=600)
-        if r.returncode != 0:
-            pytest.fail("child failed:\n" + r.stdout[-3000:]
-                        + r.stderr[-2000:])
+        import _childsuite
+        rc, out = _childsuite.join("test_redistribute_dtype.py", timeout=600)
+        if rc != 0:
+            pytest.fail("child failed:\n" + out)
 else:
     import jax
     import jax.numpy as jnp
