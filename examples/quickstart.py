@@ -1,10 +1,12 @@
 """Quickstart: the dMath programming model in 60 lines.
 
 Paper §2: "The developer uses dMath like any other mathematics library;
-the distributed computation is handled internally."  This script builds a
-device mesh, shards matrices with different layouts, multiplies them
-(auto-planned algorithm + redistribution), reshapes with precision change,
-and shows the op-plan cache amortizing repeated calls.
+the distributed computation is handled internally."  This script opens a
+:class:`repro.api.Session` (ONE mesh + layout registry + plan cache shared
+by linalg, training, and serving), shards matrices with different layouts
+through ``Session.tensor``, multiplies them (auto-planned algorithm +
+redistribution), reshapes with precision change, and shows the op-plan
+cache amortizing repeated calls.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 (set XLA_FLAGS=--xla_force_host_platform_device_count=8 for a real mesh)
@@ -19,30 +21,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DistTensor, GLOBAL_CACHE, Layout, precision,
-                        relayout_explicit)
+from repro.api import Session
+from repro.core import GLOBAL_CACHE, Layout, precision
 from repro.launch.mesh import make_mesh
 
 
 def main():
     n = len(jax.devices())
-    mesh = make_mesh((max(1, n // 4), min(4, n)), ("data", "model"))
-    print(f"mesh: {dict(mesh.shape)}")
+    sess = Session(mesh=make_mesh((max(1, n // 4), min(4, n)),
+                                  ("data", "model")))
+    print(f"mesh: {dict(sess.mesh.shape)}")
 
     # 1. distributed matrices with DIFFERENT layouts — dMath doesn't care
     a_host = np.random.default_rng(0).normal(size=(512, 256)).astype("f4")
     b_host = np.random.default_rng(1).normal(size=(256, 384)).astype("f4")
-    A = DistTensor.shard(jnp.asarray(a_host),
-                         Layout.row_sharded(2, "model"), mesh, name="A")
-    B = DistTensor.shard(jnp.asarray(b_host),
-                         Layout.blocked_2d(("data", "model")), mesh,
-                         name="B")
+    A = sess.tensor(a_host, Layout.row_sharded(2, "model"), name="A")
+    B = sess.tensor(b_host, Layout.blocked_2d(("data", "model")), name="B")
     print("A:", A, "\nB:", B)
 
     # 2. layout-independent GEMM (§3.2): the library plans the algorithm
     C = A @ B
     err = np.abs(np.asarray(C.to_global()) - a_host @ b_host).max()
     print(f"C = A @ B   max|err| = {err:.2e}   layout = {C.layout}")
+    assert sess.tensors.lookup("A") is not None   # one shared layout table
 
     # 3. reshape with precision change in flight (§3.3)
     C16 = C.with_layout(Layout.col_sharded(2, "model"),

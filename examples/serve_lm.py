@@ -1,19 +1,49 @@
-"""Batched serving example: prefill + decode with a persistent KV cache.
+"""Batched serving example: prefill + decode on the Session API.
 
-Builds a reduced gemma3-family model (sliding-window + global layers),
-submits a batch of prompts to the continuous-batching engine, and prints
-throughput — the inference counterpart of train_lm.py.
+Builds a reduced gemma3-family model (sliding-window + global layers)
+through :class:`repro.api.Session`, submits a batch of prompts to the
+continuous-batching engine from ``Session.serve`` — params and the
+fixed-size KV cache live in the session's persistent-state registry, the
+jitted steps in its compiled-artifact cache — and prints throughput: the
+inference counterpart of train_lm.py.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
 
-from repro.launch.serve import run
+import time
+
+import jax
+import numpy as np
+
+from repro.api import Session
+from repro.serve import Request
 
 
 def main():
-    total, dt = run("gemma3-27b", n_requests=6, batch_slots=3,
-                    max_seq=96, prompt_len=12, new_tokens=12,
-                    scale_down=64)
+    sess = Session()
+    plan = sess.plan("gemma3-27b", batch=3, seq=96, kind="decode",
+                     scale_down=64,
+                     model_kwargs=dict(q_chunk=64, kv_chunk=128))
+
+    with jax.set_mesh(sess.mesh):
+        eng = sess.serve(plan, batch_slots=3, max_seq=96)
+        rng = np.random.default_rng(0)
+        for rid in range(6):
+            eng.submit(Request(
+                rid=rid,
+                prompt=rng.integers(0, plan.cfg.vocab_size, 12,
+                                    dtype=np.int32),
+                max_new_tokens=12))
+        t0 = time.perf_counter()
+        total = ticks = 0
+        while (eng.queue or any(r is not None for r in eng.active)) \
+                and ticks < 10_000:
+            total += eng.step()
+            ticks += 1
+        dt = time.perf_counter() - t0
+
+    print(sess.describe())
+    print(f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s)")
     assert total >= 6 * 11, "not all requests completed"
 
 

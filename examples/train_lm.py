@@ -1,17 +1,30 @@
-"""End-to-end training driver: a qwen2-family LM on the dMath substrate.
+"""End-to-end training example: a qwen2-family LM on the Session API.
 
-Trains a reduced qwen2 (same family: GQA + QKV bias + SwiGLU) with the
-full production stack: auto-tuned data pipeline, hybrid-parallel plan,
-AdamW with ZeRO-sharded fp32 master state, checkpoint-restart, straggler
-watchdog.  Defaults fit a CPU container (~10M params, 300 steps);
-``--preset 100m`` runs the ~100M configuration from the brief.
+Trains a reduced qwen2 (same family: GQA + QKV bias + SwiGLU) through
+:class:`repro.api.Session` — the planner-validated ``ExecutablePlan``,
+the single train-step dispatcher, and the persistent device-resident
+state registry (params + optimizer state live on device across steps and
+are checkpointed straight out of the registry).  Defaults fit a CPU
+container (~10M params, 300 steps); ``--preset 100m`` runs the ~100M
+configuration from the brief.
 
 Run:  PYTHONPATH=src python examples/train_lm.py [--preset 100m]
 """
 
 import argparse
 
-from repro.launch.train import run
+import jax
+import jax.numpy as jnp
+
+from repro.api import Session
+from repro.checkpoint import CheckpointManager
+from repro.data import Pipeline, SyntheticLM
+from repro.train import AdamWConfig, warmup_cosine
+
+PRESETS = {
+    "10m":  dict(seq=128, scale_down=16, lr=3e-3, microbatches=1),
+    "100m": dict(seq=256, scale_down=4, lr=1e-3, microbatches=2),
+}
 
 
 def main():
@@ -22,18 +35,44 @@ def main():
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
 
-    if args.preset == "100m":
-        steps = args.steps or 300
-        losses = run("qwen2-0.5b", steps=steps, batch=8, seq=256,
-                     scale_down=4, lr=1e-3, microbatches=2,
-                     ckpt_dir=args.ckpt_dir, ckpt_every=100,
-                     resume=args.resume)
-    else:
-        steps = args.steps or 300
-        losses = run("qwen2-0.5b", steps=steps, batch=8, seq=128,
-                     scale_down=16, lr=3e-3,
-                     ckpt_dir=args.ckpt_dir, ckpt_every=100,
-                     resume=args.resume)
+    p = PRESETS[args.preset]
+    steps, batch = args.steps or 300, 8
+
+    sess = Session()
+    plan = sess.plan(
+        "qwen2-0.5b", batch=batch, seq=p["seq"],
+        scale_down=p["scale_down"], microbatches=p["microbatches"],
+        adamw=AdamWConfig(lr=warmup_cosine(p["lr"], steps // 10 + 1, steps)),
+        model_kwargs=dict(q_chunk=64, kv_chunk=128))
+    print(plan.describe())
+
+    mgr = CheckpointManager(args.ckpt_dir)
+    start = 0
+    with jax.set_mesh(sess.mesh):
+        if args.resume and mgr.latest_step() is not None:
+            state = mgr.restore(shardings=plan.state_shardings())
+            start = int(jax.device_get(state["opt"]["step"]))
+            sess.put("train_state", state, kind="train_state")
+            print(f"resumed from step {start}")
+        else:
+            sess.init_state(plan, seed=0)
+
+        source = SyntheticLM(plan.cfg.vocab_size, batch, p["seq"], seed=0,
+                             structured=True)
+        pipe = Pipeline(source, [], n_threads=2).start()
+        losses = []
+        try:
+            for i in range(start, steps):
+                m = sess.step(plan, jax.tree.map(jnp.asarray, next(pipe)))
+                losses.append(float(jax.device_get(m["loss"])))
+                if (i + 1) % 100 == 0 or i == start:
+                    print(f"step {i + 1:4d} loss {losses[-1]:.4f}")
+                if (i + 1) % 100 == 0:
+                    mgr.save(i + 1, sess.get("train_state"))
+            mgr.save(steps, sess.get("train_state"), blocking=True)
+        finally:
+            pipe.stop()
+
     print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {steps} steps")
     assert losses[-1] < losses[0], "training did not reduce loss"
 

@@ -1,0 +1,27 @@
+"""repro.api — the unified Session entry point (paper §2).
+
+One planner-driven facade over the whole system: ``Session.plan`` returns
+a validated :class:`ExecutablePlan`, ``Session.train_step`` is the single
+dispatcher over the plain/ZeRO, explicit-comms, and pipeline step paths
+(capability matrix in :data:`CAPABILITIES`), ``Session.dryrun`` /
+``Session.serve`` reuse the same compiled-artifact cache, and the
+persistent :class:`StateRegistry` keeps params, optimizer state, and KV
+caches device-resident across steps with footprint accounting.
+
+The launch CLIs (``launch/train.py``, ``launch/dryrun.py``,
+``launch/serve.py``) are thin wrappers over this module; the legacy
+``build_*_train_step`` functions in ``train/step.py`` are deprecation
+shims over :func:`dispatch_train_step`.
+"""
+
+from .errors import PlanMemoryError
+from .plan import CAPABILITIES, ExecutablePlan, capability_table, select_path
+from .session import Session, dispatch_train_step
+from .state import StateEntry, StateRegistry
+
+__all__ = [
+    "Session", "ExecutablePlan", "PlanMemoryError",
+    "StateRegistry", "StateEntry",
+    "CAPABILITIES", "capability_table", "select_path",
+    "dispatch_train_step",
+]

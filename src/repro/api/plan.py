@@ -1,0 +1,173 @@
+"""ExecutablePlan + the train-step capability matrix.
+
+One documented dispatch rule replaces three mutually-restricted builders:
+``Session.train_step`` (and the legacy shims in ``train/step.py``) select
+exactly one of the paths below from the mesh and the plan.  The matrix is
+data, not prose — tests assert against it and the README renders it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+#: The capability matrix: path x supported mesh axes x schedule x grad
+#: sync.  ``select_path`` picks the row; each builder still validates its
+#: own axis restriction and raises with the same wording it always had.
+CAPABILITIES: Dict[str, Dict[str, Any]] = {
+    "gspmd": dict(
+        title="plain / ZeRO (GSPMD)",
+        axes="pod x data x model — DP x TP, FSDP/ZeRO storage sharding",
+        schedules=(),
+        grad_sync="implicit GSPMD psum over the batch axes",
+        selected_when="no pipe axis and no CommsPlan (the default path)",
+    ),
+    "comms": dict(
+        title="explicit comms sync",
+        axes="pod x data only — every non-batch mesh axis must be 1",
+        schedules=(),
+        grad_sync="repro.comms bucketed (optionally bf16/int8-compressed) "
+                  "ring | rsag | tree | hierarchical all-reduce",
+        selected_when="a CommsPlan is attached and there is no pipe axis",
+    ),
+    "pipeline": dict(
+        title="pipeline (GPipe / 1F1B)",
+        axes="pod x data x pipe — non-batch, non-pipe axes must be 1",
+        schedules=("gpipe", "1f1b"),
+        grad_sync="pmean over the batch axes, or the CommsPlan schedules "
+                  "when one is attached",
+        selected_when="the mesh has a pipe axis of size > 1 (or an "
+                      "explicit PipelineSpec is passed)",
+    ),
+}
+
+
+def capability_table() -> str:
+    """The matrix rendered as a markdown table (README / --help)."""
+    rows = ["| path | supported axes | schedules | gradient sync |",
+            "|------|----------------|-----------|---------------|"]
+    for key, cap in CAPABILITIES.items():
+        sched = ", ".join(cap["schedules"]) or "—"
+        rows.append(f"| `{key}` ({cap['title']}) | {cap['axes']} | {sched} "
+                    f"| {cap['grad_sync']} |")
+    return "\n".join(rows)
+
+
+def select_path(mesh, *, comms=None, pipeline=None) -> str:
+    """The single dispatch rule (documented in :data:`CAPABILITIES`).
+
+    ``mesh`` may be a jax Mesh or anything with a ``.shape`` mapping.
+    Precedence: a pipe axis (or explicit PipelineSpec) wins — the pipeline
+    step composes with a CommsPlan internally — then an attached CommsPlan
+    selects the explicit path, else the GSPMD default.
+    """
+    shape = dict(mesh.shape) if hasattr(mesh, "shape") else dict(mesh)
+    if pipeline is not None or shape.get("pipe", 1) > 1:
+        return "pipeline"
+    if comms is not None:
+        return "comms"
+    return "gspmd"
+
+
+@dataclasses.dataclass
+class ExecutablePlan:
+    """A validated, dispatchable plan — ``Session.plan``'s return value.
+
+    Bundles everything the three launch surfaces used to thread by hand:
+    the config, the :class:`~repro.core.planner.ParallelPlan`, the built
+    model, the selected dispatch path, the resolved microbatch count and
+    pipeline spec, the memory verdict (per-stage footprints vs the
+    session budget), and — when the planner sweep ran — the per-candidate
+    refusal reasons.
+    """
+
+    cfg: Any                              # ModelConfig
+    mesh: Any
+    parallel: Any                         # ParallelPlan
+    model: Any                            # repro.models.Model
+    path: str                             # gspmd | comms | pipeline | <kind>
+    shape: Any                            # ShapeConfig
+    num_microbatches: int = 1
+    schedule: str = "gpipe"               # pipeline schedule (if any)
+    adamw: Any = None
+    comms: Any = None                     # CommsPlan routed to the step
+    pipeline: Any = None                  # PipelineSpec (resolved)
+    budget: Any = None                    # MemoryBudget it was priced against
+    footprints: Tuple = ()                # per-stage Footprints (train only)
+    refused: Mapping = dataclasses.field(default_factory=dict)
+    scores: Optional[Mapping] = None      # sweep scores when sweep=True
+
+    # -- derived views -----------------------------------------------------
+    @property
+    def kind(self) -> str:
+        return self.shape.kind
+
+    @property
+    def global_batch(self) -> int:
+        return self.shape.global_batch
+
+    @property
+    def seq_len(self) -> int:
+        return self.shape.seq_len
+
+    def capability(self) -> Optional[Dict[str, Any]]:
+        return CAPABILITIES.get(self.path)
+
+    def fits(self) -> bool:
+        if not self.footprints or self.budget is None:
+            return True
+        return all(f.fits(self.budget) for f in self.footprints)
+
+    # -- state constructors (path-aware, shared by train/dryrun) -----------
+    def state_shardings(self):
+        if self.path == "pipeline":
+            from repro.pipeline import pipeline_state_shardings
+            return pipeline_state_shardings(self.model, self.mesh,
+                                            self.pipeline, self.adamw)
+        from repro.train import step as step_mod
+        return step_mod.state_shardings(self.model, self.mesh, self.adamw)
+
+    def state_sds(self):
+        if self.path == "pipeline":
+            from repro.pipeline import pipeline_state_sds
+            return pipeline_state_sds(self.model, self.mesh,
+                                      self.pipeline, self.adamw)
+        from repro.train import step as step_mod
+        return step_mod.state_sds(self.model, self.mesh, self.adamw)
+
+    def init_state(self, key):
+        if self.path == "pipeline":
+            from repro.pipeline import pipeline_init_state
+            return pipeline_init_state(self.model, self.mesh,
+                                       self.pipeline, key)
+        from repro.train import step as step_mod
+        st = step_mod.init_state(self.model, self.mesh, key)
+        return {"params": st.params, "opt": st.opt}
+
+    def batch_specs(self):
+        """(ShapeDtypeStruct stand-ins, NamedShardings) for the inputs."""
+        from repro.configs import input_specs
+        return input_specs(self.cfg, self.shape, self.mesh, self.parallel)
+
+    def describe(self) -> str:
+        cap = self.capability()
+        lines = [f"ExecutablePlan[{self.cfg.name} {self.shape.name}] "
+                 f"path={self.path}"
+                 + (f" ({cap['title']})" if cap else ""),
+                 f"  mesh {dict(self.mesh.shape)}  "
+                 f"microbatches={self.num_microbatches}"]
+        if self.pipeline is not None:
+            lines.append(f"  pipeline: {self.pipeline.n_stages} stages "
+                         f"({self.pipeline.schedule}), bubble "
+                         f"{self.pipeline.bubble_fraction():.2f}")
+        if self.comms is not None:
+            lines.append(f"  comms: {self.comms.schedule} schedule, bucket "
+                         f"{self.comms.bucket_bytes >> 20} MiB")
+        if self.footprints and self.budget is not None:
+            from repro.core import memory as mem_mod
+            peak = mem_mod.peak_stage_footprint(self.footprints)
+            lines.append(f"  memory: predicted peak "
+                         f"{peak.total / mem_mod.GIB:.3f} GiB/device vs "
+                         f"{self.budget.describe()} -> "
+                         f"{'fits' if self.fits() else 'OOM'}")
+        return "\n".join(lines)

@@ -1,0 +1,450 @@
+"""repro.api.Session — the one planner-driven entry point (paper §2).
+
+dMath's productivity claim is that "the developer uses dMath like any
+other mathematics library; the distributed computation is handled
+internally", with persistent data kept in GPU memory so nothing churns
+across the host boundary per step.  The :class:`Session` is that claim
+made into an object: it owns
+
+- the **mesh** and the gradient-sync :class:`~repro.comms.Topology`,
+- a **planner handle** — :meth:`Session.plan` runs ``plan_for`` plus the
+  memory fail-fast and returns a validated
+  :class:`~repro.api.plan.ExecutablePlan` with refusal reasons attached,
+- the **persistent sharded-state registry** (params / optimizer state /
+  KV caches live on device across steps, with footprint accounting
+  against the session :class:`~repro.core.memory.MemoryBudget`),
+- the **compiled-artifact cache** (:class:`~repro.core.opcache.OpCache`)
+  shared by :meth:`train_step`, :meth:`dryrun` and :meth:`serve`, and
+- the **tensor registry** the :class:`~repro.core.dtensor.DistTensor`
+  linalg surface registers into (:meth:`Session.tensor`), so the math
+  library and the training stack finally share one mesh and one layout
+  table.
+
+:meth:`Session.train_step` is the SINGLE dispatcher over the three step
+paths (see :data:`repro.api.plan.CAPABILITIES`); the legacy builders in
+``train/step.py`` are deprecation shims over the same dispatcher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (SHAPES, ShapeConfig, default_microbatches,
+                           get_config, scale_config)
+from repro.core import memory as mem_mod
+from repro.core.dtensor import REGISTRY as TENSOR_REGISTRY
+from repro.core.dtensor import DistTensor, TensorRegistry
+from repro.core.layout import Layout
+from repro.core.opcache import OpCache
+from repro.core.planner import (grad_sync_topology, plan_for,
+                                score_hybrid_candidates)
+
+from .errors import PlanMemoryError
+from .plan import ExecutablePlan, select_path
+from .state import StateRegistry
+
+
+def dispatch_train_step(model, mesh, *, adamw=None,
+                        num_microbatches: Optional[int] = None,
+                        comms=None, pipeline=None,
+                        path: Optional[str] = None) -> Callable:
+    """THE train-step dispatcher: one signature, three paths.
+
+    Selects (or is told) the path per the capability matrix and returns
+    the un-jitted ``train_step(state, batch) -> (state, metrics)``
+    callable.  ``Session.train_step`` wraps this with the session's
+    compiled-artifact cache and donation; the legacy ``build_*`` shims in
+    :mod:`repro.train.step` call it with their historical ``path`` pinned.
+    """
+    from repro.train import step as step_mod
+
+    if path is None:
+        path = select_path(mesh, comms=comms, pipeline=pipeline)
+    if path == "pipeline":
+        return step_mod._pipeline_train_step(
+            model, mesh, adamw, num_microbatches=num_microbatches,
+            pipeline=pipeline, comms=comms)
+    if path == "comms":
+        return step_mod._comms_train_step(
+            model, mesh, adamw, num_microbatches or 1, comms)
+    if path == "gspmd":
+        return step_mod._gspmd_train_step(
+            model, mesh, adamw, num_microbatches or 1)
+    raise ValueError(f"unknown train-step path {path!r}; expected one of "
+                     "gspmd | comms | pipeline")
+
+
+class Session:
+    """One mesh, one planner, one persistent device-resident state store.
+
+    Lifecycle::
+
+        sess = Session()                                  # host mesh
+        plan = sess.plan("qwen2-0.5b", batch=8, seq=128, scale_down=16)
+        sess.init_state(plan, seed=0)                     # params+opt on device
+        with jax.set_mesh(sess.mesh):
+            for batch in data:
+                metrics = sess.step(plan, batch)          # state stays resident
+
+    ``dryrun`` lowers the same dispatched step against shape stand-ins,
+    ``serve`` builds the batched engine on the same compiled-artifact
+    cache, and ``tensor`` constructs :class:`DistTensor`\\ s on the
+    session mesh — train, dryrun, serve and linalg all share one Session.
+    """
+
+    def __init__(self, mesh=None, *, pp: int = 1,
+                 hbm_gib: Optional[float] = None,
+                 opcache: Optional[OpCache] = None,
+                 tensors: Optional[TensorRegistry] = None,
+                 state: Optional[StateRegistry] = None):
+        from repro.launch import mesh as mesh_mod
+        self.mesh = mesh if mesh is not None else mesh_mod.make_host_mesh(pp)
+        self.budget = mem_mod.budget_for(self.mesh, hbm_gib=hbm_gib)
+        self.topology = grad_sync_topology(self.mesh)
+        self.opcache = opcache if opcache is not None else OpCache("session")
+        self.tensors = tensors if tensors is not None else TENSOR_REGISTRY
+        self.state = state if state is not None else StateRegistry(
+            budget=self.budget,
+            n_devices=math.prod(self.mesh.shape.values()) or 1)
+
+    # ------------------------------------------------------------------
+    # planning
+    # ------------------------------------------------------------------
+    def plan(self, arch, *, shape: Union[str, ShapeConfig, None] = None,
+             batch: Optional[int] = None, seq: Optional[int] = None,
+             kind: str = "train", microbatches: Optional[int] = None,
+             pp_schedule: str = "gpipe", comms="auto", adamw=None,
+             scale_down: int = 1, model_kwargs=None, plan_kwargs=None,
+             check_memory: bool = True, sweep: bool = False
+             ) -> ExecutablePlan:
+        """Plan one (config, shape) cell on the session mesh.
+
+        Returns a validated :class:`ExecutablePlan`: parallel layouts from
+        the planner, the dispatch path from the capability matrix, the
+        resolved microbatch count (clamped to the batch shards; pipelined
+        cells additionally require the local batch to divide), per-stage
+        footprints priced against the session budget, and — when the cell
+        is refused or ``sweep=True`` — the planner's per-candidate refusal
+        reasons.  ``check_memory=True`` (default) raises a structured
+        :class:`PlanMemoryError` instead of letting the step OOM minutes
+        into compilation; an all-refused sweep raises one error listing
+        every ``(dp, tp, pp, M)`` with its reason.
+
+        ``comms``: ``"auto"`` routes DP grad sync through the planner's
+        cost-model-chosen :class:`~repro.comms.CommsPlan` on pure-DP (x PP)
+        meshes, ``"off"``/``None`` keeps GSPMD's implicit collectives, and
+        an explicit ``CommsPlan`` is used as given.
+        """
+        from repro.models import Model
+
+        cfg = get_config(arch) if isinstance(arch, str) else arch
+        if scale_down > 1:
+            cfg = scale_config(cfg, scale_down)
+        if isinstance(shape, str):
+            shape = SHAPES[shape]
+        if shape is None:
+            if batch is None or seq is None:
+                raise ValueError("Session.plan needs shape= or both batch= "
+                                 "and seq=")
+            shape = ShapeConfig(f"custom_{kind}", seq, batch, kind)
+
+        mesh = self.mesh
+        parallel = plan_for(cfg, mesh, **(plan_kwargs or {}))
+
+        # -- resolve microbatches + pipeline spec (train cells) ------------
+        nmb = 1
+        spec = None
+        if shape.kind == "train":
+            nb = math.prod(mesh.shape.get(a, 1)
+                           for a in parallel.batch_axes) or 1
+            nmb = (microbatches if microbatches is not None
+                   else default_microbatches(cfg, shape, mesh, parallel))
+            nmb = max(1, min(nmb, shape.global_batch // nb or 1))
+            spec = parallel.pipeline
+            if spec is not None:
+                # microbatches split the LOCAL batch shard on the pipe axis
+                local_b = max(1, shape.global_batch // nb)
+                nmb = max(1, min(nmb, local_b))
+                while local_b % nmb:
+                    nmb -= 1
+                spec = dataclasses.replace(spec, schedule=pp_schedule,
+                                           num_microbatches=nmb)
+                parallel = dataclasses.replace(parallel, pipeline=spec)
+
+        model = Model(cfg, mesh, parallel, **(model_kwargs or {}))
+
+        # -- resolve comms routing + the dispatch path ---------------------
+        comms_plan = None
+        if shape.kind == "train" and comms is not None and comms != "off":
+            if comms == "auto":
+                dp_only = all(
+                    n == 1 for a, n in mesh.shape.items()
+                    if a not in parallel.batch_axes + ("pipe",))
+                if dp_only:
+                    comms_plan = parallel.comms
+            else:
+                comms_plan = comms
+        path = (select_path(mesh, comms=comms_plan, pipeline=spec)
+                if shape.kind == "train" else shape.kind)
+
+        # -- memory verdict (train cells) ----------------------------------
+        footprints: tuple = ()
+        refused: dict = {}
+        scores = None
+        if shape.kind == "train":
+            moment_itemsize = (jnp.dtype(adamw.moment_dtype).itemsize
+                               if adamw is not None else 4)
+            footprints = tuple(mem_mod.footprints_for_mesh(
+                cfg, mesh, global_batch=shape.global_batch,
+                seq_len=shape.seq_len, num_microbatches=nmb,
+                schedule=pp_schedule, moment_itemsize=moment_itemsize))
+            fits = all(f.fits(self.budget) for f in footprints)
+            if sweep or (check_memory and not fits):
+                n_dev = math.prod(mesh.shape.values()) or 1
+                scores, refused = score_hybrid_candidates(
+                    cfg, n_dev, global_batch=shape.global_batch,
+                    seq_len=shape.seq_len, schedule=pp_schedule,
+                    hbm_budget=self.budget, return_refused=True)
+                if sweep and not scores:
+                    raise PlanMemoryError.all_refused(refused, self.budget,
+                                                      n_dev)
+            if check_memory and not fits:
+                raise PlanMemoryError.for_cell(
+                    footprints, self.budget,
+                    refused=refused if not scores else None)
+
+        return ExecutablePlan(
+            cfg=cfg, mesh=mesh, parallel=parallel, model=model, path=path,
+            shape=shape, num_microbatches=nmb, schedule=pp_schedule,
+            adamw=adamw, comms=comms_plan, pipeline=spec,
+            budget=self.budget, footprints=footprints, refused=refused,
+            scores=scores)
+
+    # ------------------------------------------------------------------
+    # the single train-step dispatcher
+    # ------------------------------------------------------------------
+    def _step_key(self, plan: ExecutablePlan, **extra):
+        return self.opcache.key_for(
+            "train_step", (),
+            mesh_shape=tuple(self.mesh.shape.items()),
+            model=id(plan.model), path=plan.path,
+            nmb=plan.num_microbatches, schedule=plan.schedule,
+            adamw=id(plan.adamw), comms=repr(plan.comms), **extra)
+
+    def train_step(self, plan: ExecutablePlan, *, jit: bool = True
+                   ) -> Callable:
+        """The jitted ``train_step(state, batch)`` for a validated plan.
+
+        Dispatches to the plain/ZeRO, comms-sync, or pipeline path per the
+        capability matrix and caches the jitted callable in the session's
+        compiled-artifact cache (state is donated: the update is in-place,
+        dMath §2.1).  Repeated calls with the same plan are cache hits.
+        """
+        if plan.kind != "train":
+            raise ValueError(
+                f"train_step needs a train plan, got kind={plan.kind!r}")
+
+        def build():
+            fn = dispatch_train_step(
+                plan.model, self.mesh, adamw=plan.adamw,
+                num_microbatches=plan.num_microbatches, comms=plan.comms,
+                pipeline=plan.pipeline, path=plan.path)
+            return jax.jit(fn, donate_argnums=(0,)) if jit else fn
+
+        return self.opcache.get_or_build(
+            self._step_key(plan, jit=jit), "train_step", build)
+
+    # ------------------------------------------------------------------
+    # persistent device-resident state
+    # ------------------------------------------------------------------
+    def init_state(self, plan: ExecutablePlan, *, seed: int = 0,
+                   name: str = "train_state"):
+        """Initialize the plan's sharded train state and make it resident."""
+        state = plan.init_state(jax.random.PRNGKey(seed))
+        self.state.put(name, state, kind="train_state")
+        return state
+
+    def step(self, plan: ExecutablePlan, batch, *,
+             name: str = "train_state"):
+        """One train step on the registry-resident state.
+
+        The state never leaves the device and is never re-put by the
+        caller: the donated input buffers die inside the step and the
+        registry entry is refreshed with the output state.
+        """
+        fn = self.train_step(plan)
+        new_state, metrics = fn(self.state.get(name), batch)
+        self.state.update(name, new_state)
+        return metrics
+
+    def put(self, name: str, value, kind: str = "state"):
+        """Make a pytree persistent (footprint-accounted against the
+        session budget)."""
+        return self.state.put(name, value, kind=kind)
+
+    def get(self, name: str):
+        return self.state.get(name)
+
+    def evict(self, name: str):
+        return self.state.evict(name)
+
+    # ------------------------------------------------------------------
+    # dryrun: lower the dispatched step against shape stand-ins
+    # ------------------------------------------------------------------
+    def dryrun(self, plan: ExecutablePlan):
+        """Lower (not run) the cell's step -> ``(lowered, meta)``.
+
+        Train cells lower the SAME dispatched train step ``train_step``
+        compiles — through the same compiled-artifact cache — with
+        explicit state shardings and donation; prefill/decode cells lower
+        the model's serve steps.  ``lowered.compile()`` gives
+        memory/cost/HLO analyses (see ``launch/dryrun.py``).
+        """
+        from repro.models.params import tree_sds, tree_shardings
+
+        cfg, model, shape = plan.cfg, plan.model, plan.shape
+        b_sds, b_sh = plan.batch_specs()
+
+        if shape.kind == "train":
+            st_sds = plan.state_sds()
+            st_sh = plan.state_shardings()
+
+            def build():
+                fn = dispatch_train_step(
+                    model, self.mesh, adamw=plan.adamw,
+                    num_microbatches=plan.num_microbatches,
+                    comms=plan.comms, pipeline=plan.pipeline,
+                    path=plan.path)
+                return jax.jit(fn, in_shardings=(st_sh, b_sh),
+                               out_shardings=(st_sh, None),
+                               donate_argnums=(0,))
+
+            f = self.opcache.get_or_build(
+                self._step_key(plan, sharded=True), "train_step", build)
+            lowered = f.lower(st_sds, b_sds)
+            meta = {"step": "train_step", "path": plan.path,
+                    "microbatches": plan.num_microbatches,
+                    "pp": self.mesh.shape.get("pipe", 1),
+                    "moment_itemsize": jnp.dtype(
+                        plan.adamw.moment_dtype if plan.adamw
+                        else jnp.float32).itemsize}
+
+        elif shape.kind == "prefill":
+            p_sds, p_sh = model.param_sds(), model.param_shardings()
+
+            def prefill_step(params, batch):
+                return model.prefill(params, batch["tokens"],
+                                     batch.get("vision_embeds"))
+
+            key = self.opcache.key_for(
+                "prefill_step", (), mesh_shape=tuple(self.mesh.shape.items()),
+                model=id(model))
+            f = self.opcache.get_or_build(
+                key, "prefill_step",
+                lambda: jax.jit(prefill_step, in_shardings=(p_sh, b_sh)))
+            lowered = f.lower(p_sds, b_sds)
+            meta = {"step": "prefill_step", "path": "serve"}
+
+        else:  # decode / long_decode: serve_step with a seq_len KV cache
+            p_sds, p_sh = model.param_sds(), model.param_shardings()
+            c_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+            c_sds = tree_sds(c_specs)
+            c_sh = tree_shardings(c_specs, self.mesh)
+
+            def serve_step(params, cache, batch):
+                return model.decode_step(params, cache, batch["tokens"],
+                                         batch["pos"])
+
+            key = self.opcache.key_for(
+                "serve_step", (), mesh_shape=tuple(self.mesh.shape.items()),
+                model=id(model), B=shape.global_batch, T=shape.seq_len)
+            f = self.opcache.get_or_build(
+                key, "serve_step",
+                lambda: jax.jit(serve_step, in_shardings=(p_sh, c_sh, b_sh),
+                                donate_argnums=(1,)))
+            lowered = f.lower(p_sds, c_sds, b_sds)
+            meta = {"step": "serve_step", "path": "serve"}
+
+        meta.update(arch=cfg.name, shape=shape.name, plan={
+            "attn_mode": plan.parallel.attn_mode,
+            "fsdp": plan.parallel.fsdp,
+            "seq_parallel_residual": plan.parallel.seq_parallel_residual,
+            "batch_axes": list(plan.parallel.batch_axes)})
+        return lowered, meta
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def serve(self, plan: ExecutablePlan, *, batch_slots: int,
+              max_seq: int, temperature: float = 0.0, seed: int = 0,
+              name: str = "serve"):
+        """Build the batched engine on the session's persistent state.
+
+        Params live in the state registry under ``{name}/params`` (reused
+        across engines — restarting a server never re-initializes or
+        re-uploads weights) and the engine's fixed-size KV cache is
+        registered under ``{name}/kv_cache`` so its footprint is
+        accounted; the engine's jitted prefill/decode steps come from the
+        session's compiled-artifact cache.
+        """
+        from repro.serve import Engine
+
+        model = plan.model
+        pname = f"{name}/params"
+        if pname in self.state:
+            params = self.state.get(pname)
+            # the registry key is caller-chosen: refuse to hand one
+            # model's weights to a different architecture/scale
+            want = model.param_sds()
+            same = (jax.tree.structure(params) == jax.tree.structure(want)
+                    and all(tuple(a.shape) == tuple(b.shape)
+                            for a, b in zip(jax.tree.leaves(params),
+                                            jax.tree.leaves(want))))
+            if not same:
+                raise ValueError(
+                    f"persistent params {pname!r} were initialized for a "
+                    f"different model than {plan.cfg.name!r} (pytree or "
+                    f"shapes differ); evict them or serve under another "
+                    f"name=")
+        else:
+            params = model.init(jax.random.PRNGKey(seed))
+            params = jax.device_put(params, model.param_shardings())
+            self.state.put(pname, params, kind="params")
+        return Engine(model, params, batch_slots, max_seq,
+                      temperature=temperature, seed=seed,
+                      opcache=self.opcache, registry=self.state,
+                      cache_key=f"{name}/kv_cache")
+
+    # ------------------------------------------------------------------
+    # the linalg surface
+    # ------------------------------------------------------------------
+    def tensor(self, data, layout: Optional[Layout] = None, *,
+               name: Optional[str] = None, **kw) -> DistTensor:
+        """Construct a :class:`DistTensor` on the session mesh.
+
+        Registers in the session's tensor registry, so the linalg surface
+        and the training surface share one layout table (and derived
+        tensors — relayouts, GEMM results — inherit it).
+        """
+        data = jnp.asarray(data)
+        if layout is None:
+            layout = Layout.replicated(data.ndim)
+        return DistTensor.shard(data, layout, self.mesh, name=name,
+                                registry=self.tensors, **kw)
+
+    # ------------------------------------------------------------------
+    def describe(self) -> str:
+        lines = [f"Session(mesh={dict(self.mesh.shape)}, "
+                 f"budget={self.budget.describe()})",
+                 self.state.report()]
+        stats = self.opcache.stats()
+        if stats:
+            lines.append("compiled-artifact cache: " + ", ".join(
+                f"{op}: {s.compiles} compiles / {s.hits} hits"
+                for op, s in sorted(stats.items())))
+        return "\n".join(lines)

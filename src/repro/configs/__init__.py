@@ -18,10 +18,10 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .base import (ARCH_IDS, SHAPES, ModelConfig, ShapeConfig, all_archs,
-                   cells, get_config, register)
+                   cells, get_config, register, scale_config)
 
 __all__ = ["ARCH_IDS", "SHAPES", "ModelConfig", "ShapeConfig", "all_archs",
-           "cells", "get_config", "register", "input_specs",
+           "cells", "get_config", "register", "scale_config", "input_specs",
            "default_microbatches"]
 
 

@@ -200,3 +200,41 @@ def cells(include_skipped: bool = False):
                 continue
             out.append((a, s.name, None) if include_skipped else (a, s.name))
     return out
+
+
+def scale_config(cfg: ModelConfig, down: int) -> ModelConfig:
+    """Reduced-config variant of an arch (same family/topology).
+
+    Divides every capacity dim by ``down`` with per-field floors so the
+    result stays a valid member of the family — the knob the CPU-container
+    launchers and examples use (``--scale-down``).  Lives here (not in
+    ``launch/``) because :meth:`repro.api.Session.plan` applies it too.
+    """
+    if down <= 1:
+        return cfg
+    r = lambda x, m=8: max(m, x // down)
+    kw = dict(
+        n_layers=max(2, cfg.n_layers // down),
+        d_model=r(cfg.d_model, 64),
+        d_ff=r(cfg.d_ff, 64) if cfg.d_ff else 0,
+        vocab_size=max(256, cfg.vocab_size // down),
+    )
+    if cfg.n_heads:
+        heads = max(2, cfg.n_heads // down)
+        kv = max(1, min(cfg.n_kv_heads, heads))
+        kw.update(n_heads=heads, n_kv_heads=kv,
+                  head_dim=max(8, kw["d_model"] // heads))
+    if cfg.n_experts:
+        kw.update(n_experts=max(4, cfg.n_experts // down),
+                  top_k=min(cfg.top_k, 2),
+                  d_ff_expert=r(cfg.d_ff_expert, 32))
+    if cfg.ssm_state:
+        kw.update(ssm_state=max(16, cfg.ssm_state // down),
+                  ssm_head_dim=16)
+    if cfg.attn_every:
+        kw.update(attn_every=2)
+    if cfg.n_vision_tokens:
+        kw.update(n_vision_tokens=16)
+    if cfg.window:
+        kw.update(window=16)
+    return dataclasses.replace(cfg, **kw)

@@ -29,15 +29,27 @@ from .redistribute import relayout, relayout_explicit
 
 
 class TensorRegistry:
-    """name -> (shape, dtype, layout): the global layout table of §2.1."""
+    """name -> (shape, dtype, layout): the global layout table of §2.1.
+
+    All mutation happens under one lock — including anonymous-name
+    allocation, so concurrent ``DistTensor`` construction can never mint
+    duplicate names — and entries can be ``evict``ed/``clear``ed so long
+    sessions and test runs don't leak layout-table rows.
+    """
 
     def __init__(self):
         self._table: Dict[str, tuple] = {}
         self._lock = threading.Lock()
+        self._anon = 0
 
     def register(self, name: str, shape, dtype, layout: Layout):
         with self._lock:
             self._table[name] = (tuple(shape), jnp.dtype(dtype), layout)
+
+    def next_anon(self) -> str:
+        with self._lock:
+            self._anon += 1
+            return f"tensor_{self._anon}"
 
     def lookup(self, name: str):
         return self._table.get(name)
@@ -45,29 +57,49 @@ class TensorRegistry:
     def layouts(self) -> Dict[str, Layout]:
         return {k: v[2] for k, v in self._table.items()}
 
+    def evict(self, name: str) -> bool:
+        """Drop one layout-table entry; True if it existed."""
+        with self._lock:
+            return self._table.pop(name, None) is not None
+
+    def clear(self) -> None:
+        with self._lock:
+            self._table.clear()
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._table
+
     def __len__(self):
         return len(self._table)
 
 
 REGISTRY = TensorRegistry()
-_ANON = [0]
 
 
 @dataclasses.dataclass
 class DistTensor:
-    """A global array + its layout + the mesh it lives on."""
+    """A global array + its layout + the mesh it lives on.
+
+    ``registry`` defaults to the process-wide :data:`REGISTRY`;
+    :meth:`repro.api.Session.tensor` passes the session's table instead so
+    the linalg surface and the training surface share one registry.
+    """
 
     data: jax.Array
     layout: Layout
     mesh: Mesh
     name: Optional[str] = None
     policy: precision.Policy = precision.MIXED
+    registry: Optional[TensorRegistry] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def __post_init__(self):
+        if self.registry is None:
+            self.registry = REGISTRY
         if self.name is None:
-            _ANON[0] += 1
-            self.name = f"tensor_{_ANON[0]}"
-        REGISTRY.register(self.name, self.data.shape, self.data.dtype, self.layout)
+            self.name = self.registry.next_anon()
+        self.registry.register(self.name, self.data.shape, self.data.dtype,
+                               self.layout)
 
     # -- construction -------------------------------------------------------
     @staticmethod
@@ -97,7 +129,7 @@ class DistTensor:
             arr = relayout(self.data, dst, self.mesh, dtype, src=self.layout)
         return DistTensor(jax.device_put(arr, dst.sharding(self.mesh)),
                           dst, self.mesh, name=f"{self.name}@{dst}",
-                          policy=self.policy)
+                          policy=self.policy, registry=self.registry)
 
     def replicated(self) -> "DistTensor":
         return self.with_layout(Layout.replicated(self.data.ndim))
@@ -111,7 +143,8 @@ class DistTensor:
         )
         lay = out_layout if out_layout is not None else plan.out_layout
         return DistTensor(c, lay, self.mesh,
-                          name=f"({self.name}@{other.name})", policy=self.policy)
+                          name=f"({self.name}@{other.name})",
+                          policy=self.policy, registry=self.registry)
 
     def __matmul__(self, other: "DistTensor") -> "DistTensor":
         return self.matmul(other)
@@ -124,7 +157,8 @@ class DistTensor:
             arr = op(self.data, o.data)
         else:
             arr = op(self.data, other)
-        return DistTensor(arr, self.layout, self.mesh, policy=self.policy)
+        return DistTensor(arr, self.layout, self.mesh, policy=self.policy,
+                          registry=self.registry)
 
     def __add__(self, other):
         return self._ewise(other, jnp.add)

@@ -12,14 +12,10 @@ from typing import Any, Dict, Optional  # noqa: E402
 import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.configs import (SHAPES, default_microbatches, get_config,  # noqa: E402
-                           input_specs, cells)
+from repro.api import Session  # noqa: E402
+from repro.configs import cells  # noqa: E402
 from repro.core import memory as mem_mod  # noqa: E402
-from repro.core.planner import plan_for  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.models import Model  # noqa: E402
-from repro.models.params import tree_sds, tree_shardings  # noqa: E402
-from repro.train import step as train_step_mod  # noqa: E402
 
 """Multi-pod dry-run (deliverable e).
 
@@ -134,116 +130,47 @@ def _adamw_from(over: Dict[str, Any]):
 
 def build_lowered(arch: str, shape_name: str, mesh, *,
                   microbatches: Optional[int] = None, model_kwargs=None,
-                  plan_kwargs=None):
-    cfg = get_config(arch)
-    shape = SHAPES[shape_name]
+                  plan_kwargs=None, comms: str = "off",
+                  session: Optional[Session] = None):
+    """Plan + lower one cell through the Session facade.
+
+    Returns ``(lowered, meta, plan)`` where ``plan`` is the validated
+    :class:`repro.api.ExecutablePlan` (its ``footprints`` are the
+    predicted side of the fits/OOM verdict).  ``check_memory=False``: the
+    dry-run REPORTS the verdict instead of fail-fasting — compile-side
+    OOMs are exactly what it exists to surface.  ``comms`` defaults to
+    ``"off"`` (unlike the train CLI's ``"auto"``) so the recorded
+    collective schedules stay comparable with the artifact history;
+    ``--comms auto`` lowers the explicit-comms step on eligible cells.
+    """
+    session = session or Session(mesh=mesh)
     over = OVERRIDES.get(arch, {})
-    plan_kwargs = {**over.get("plan_kwargs", {}), **(plan_kwargs or {})}
-    model_kwargs = {**over.get("model_kwargs", {}), **(model_kwargs or {})}
-    adamw = _adamw_from(over)
-    plan = plan_for(cfg, mesh, **plan_kwargs)
-    model = Model(cfg, mesh, plan, **model_kwargs)
-    b_sds, b_sh = input_specs(cfg, shape, mesh, plan)
-
-    if shape.kind == "train":
-        nmb = (microbatches if microbatches is not None
-               else over.get("train_microbatches")
-               or default_microbatches(cfg, shape, mesh, plan))
-        # each microbatch must still span every batch shard
-        import math as _m
-        nb = _m.prod(mesh.shape[a] for a in plan.batch_axes)
-        nmb = max(1, min(nmb, shape.global_batch // nb))
-        if mesh.shape.get("pipe", 1) > 1:
-            # pipelined cell: microbatches split the LOCAL batch shard
-            import dataclasses as _dc
-
-            from repro import pipeline as pipe_mod
-
-            local_b = shape.global_batch // nb
-            nmb = max(1, min(nmb, local_b))
-            while local_b % nmb:
-                nmb -= 1
-            spec = _dc.replace(plan.pipeline, num_microbatches=nmb)
-            ts = train_step_mod.build_pipeline_train_step(
-                model, mesh, adamw, pipeline=spec)
-            st_sds = pipe_mod.pipeline_state_sds(model, mesh, spec, adamw)
-            st_sh = pipe_mod.pipeline_state_shardings(model, mesh, spec,
-                                                      adamw)
-        else:
-            ts = train_step_mod.build_train_step(model, mesh, adamw,
-                                                 num_microbatches=nmb)
-            st_sds = train_step_mod.state_sds(model, mesh, adamw)
-            st_sh = train_step_mod.state_shardings(model, mesh, adamw)
-        f = jax.jit(ts, in_shardings=(st_sh, b_sh),
-                    out_shardings=(st_sh, None), donate_argnums=(0,))
-        lowered = f.lower(st_sds, b_sds)
-        meta = {"step": "train_step", "microbatches": nmb,
-                "pp": mesh.shape.get("pipe", 1),
-                "moment_itemsize": jnp.dtype(
-                    adamw.moment_dtype if adamw else jnp.float32).itemsize}
-
-    elif shape.kind == "prefill":
-        p_sds = model.param_sds()
-        p_sh = model.param_shardings()
-
-        def prefill_step(params, batch):
-            return model.prefill(params, batch["tokens"],
-                                 batch.get("vision_embeds"))
-
-        lowered = jax.jit(prefill_step, in_shardings=(p_sh, b_sh)) \
-            .lower(p_sds, b_sds)
-        meta = {"step": "prefill_step"}
-
-    else:  # decode / long_decode: serve_step with a seq_len KV cache
-        p_sds = model.param_sds()
-        p_sh = model.param_shardings()
-        c_specs = model.cache_specs(shape.global_batch, shape.seq_len)
-        c_sds = tree_sds(c_specs)
-        c_sh = tree_shardings(c_specs, mesh)
-
-        def serve_step(params, cache, batch):
-            return model.decode_step(params, cache, batch["tokens"],
-                                     batch["pos"])
-
-        lowered = jax.jit(serve_step, in_shardings=(p_sh, c_sh, b_sh),
-                          donate_argnums=(1,)) \
-            .lower(p_sds, c_sds, b_sds)
-        meta = {"step": "serve_step"}
-
-    meta.update(arch=arch, shape=shape_name, plan={
-        "attn_mode": plan.attn_mode, "fsdp": plan.fsdp,
-        "seq_parallel_residual": plan.seq_parallel_residual,
-        "batch_axes": list(plan.batch_axes)})
-    return lowered, meta, model
-
-
-def predicted_footprints(model, mesh, meta, shape_name: str):
-    """Per-stage memory-model prediction for a lowered train cell.
-
-    Shares :func:`repro.core.memory.footprints_for_mesh` with the
-    ``launch/train.py`` fail-fast; the schedule comes from the plan's
-    PipelineSpec (what ``build_lowered`` actually compiles)."""
-    shape = SHAPES[shape_name]
-    spec = model.plan.pipeline
-    return mem_mod.footprints_for_mesh(
-        model.cfg, mesh, global_batch=shape.global_batch,
-        seq_len=shape.seq_len,
-        num_microbatches=meta.get("microbatches", 1),
-        schedule=spec.schedule if spec is not None else "gpipe",
-        moment_itemsize=meta.get("moment_itemsize", 4))
+    plan = session.plan(
+        arch, shape=shape_name,
+        microbatches=(microbatches if microbatches is not None
+                      else over.get("train_microbatches")),
+        adamw=_adamw_from(over), comms=comms,
+        model_kwargs={**over.get("model_kwargs", {}), **(model_kwargs or {})},
+        plan_kwargs={**over.get("plan_kwargs", {}), **(plan_kwargs or {})},
+        check_memory=False)
+    lowered, meta = session.dryrun(plan)
+    return lowered, meta, plan
 
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              microbatches: Optional[int] = None, model_kwargs=None,
              plan_kwargs=None, hlo_out: Optional[str] = None,
-             pp: int = 1, hbm_gib: Optional[float] = None) -> Dict[str, Any]:
+             pp: int = 1, hbm_gib: Optional[float] = None,
+             comms: str = "off") -> Dict[str, Any]:
     mesh = make_production_mesh(multi_pod=multi_pod, pp=pp)
+    session = Session(mesh=mesh, hbm_gib=hbm_gib)
     n_chips = 512 if multi_pod else 256
     with jax.set_mesh(mesh):
         t0 = time.time()
-        lowered, meta, model = build_lowered(
+        lowered, meta, plan = build_lowered(
             arch, shape_name, mesh, microbatches=microbatches,
-            model_kwargs=model_kwargs, plan_kwargs=plan_kwargs)
+            model_kwargs=model_kwargs, plan_kwargs=plan_kwargs,
+            comms=comms, session=session)
         t_lower = time.time() - t0
 
         t0 = time.time()
@@ -292,9 +219,11 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         # per-stage footprint model vs the platform budget: the predicted
         # side of the fits/OOM verdict (memory_analysis is the measured
         # side).  Printed as a table; recorded in the artifact so CI can
-        # track the predicted-vs-measured gap per PR.
-        budget = mem_mod.budget_for(mesh, hbm_gib=hbm_gib)
-        fps = predicted_footprints(model, mesh, meta, shape_name)
+        # track the predicted-vs-measured gap per PR.  The footprints come
+        # straight off the ExecutablePlan — the same ones Session.plan
+        # fail-fasts on at the train surface.
+        budget = session.budget
+        fps = plan.footprints
         peak = mem_mod.peak_stage_footprint(fps)
         print(f"memory model ({arch} {shape_name}):")
         print(mem_mod.footprint_table(fps, budget))
@@ -327,6 +256,10 @@ def main():
     ap.add_argument("--hbm-gib", type=float, default=None,
                     help="per-device HBM budget in GiB for the footprint "
                          "verdict (default: platform table in core/memory)")
+    ap.add_argument("--comms", choices=["auto", "off"], default="off",
+                    help="lower DP grad sync through repro.comms schedules "
+                         "on eligible cells (default off: keeps artifacts "
+                         "comparable with the GSPMD-path history)")
     ap.add_argument("--out", type=str, default="experiments/dryrun")
     ap.add_argument("--hlo-out", type=str, default=None)
     args = ap.parse_args()
@@ -352,7 +285,7 @@ def main():
                 res = run_cell(arch, shape, multi_pod=mp,
                                microbatches=args.microbatches,
                                hlo_out=hlo_out, pp=args.pp,
-                               hbm_gib=args.hbm_gib)
+                               hbm_gib=args.hbm_gib, comms=args.comms)
                 path = os.path.join(args.out, tag + ".json")
                 with open(path, "w") as f:
                     json.dump(res, f, indent=1)

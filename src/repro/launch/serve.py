@@ -1,7 +1,10 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Spins up the batched engine on a reduced config, feeds synthetic prompts,
-reports tokens/sec — the inference counterpart of launch/train.py.
+A thin CLI over :class:`repro.api.Session`: ``Session.plan`` (decode
+kind) -> ``Session.serve`` (batched engine on the session's persistent
+params + KV cache, jitted steps in the session's compiled-artifact
+cache), feeds synthetic prompts, reports tokens/sec — the inference
+counterpart of launch/train.py.
 """
 
 from __future__ import annotations
@@ -12,26 +15,23 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.core.planner import plan_for
-from repro.launch import mesh as mesh_mod
-from repro.launch.train import scale_config
-from repro.models import Model
-from repro.serve import Engine, Request
+from repro.api import Session
+from repro.serve import Request
 
 
 def run(arch: str, *, n_requests: int = 8, batch_slots: int = 4,
         max_seq: int = 128, prompt_len: int = 16, new_tokens: int = 16,
         scale_down: int = 64, seed: int = 0, mesh=None):
-    cfg = scale_config(get_config(arch), scale_down)
-    mesh = mesh or mesh_mod.make_host_mesh()
-    plan = plan_for(cfg, mesh)
-    model = Model(cfg, mesh, plan, q_chunk=64, kv_chunk=128, ssd_chunk=32)
+    session = Session(mesh=mesh)
+    plan = session.plan(
+        arch, batch=batch_slots, seq=max_seq, kind="decode",
+        scale_down=scale_down,
+        model_kwargs=dict(q_chunk=64, kv_chunk=128, ssd_chunk=32))
+    cfg = plan.cfg
 
-    with jax.set_mesh(mesh):
-        params = model.init(jax.random.PRNGKey(seed))
-        params = jax.device_put(params, model.param_shardings())
-        eng = Engine(model, params, batch_slots, max_seq)
+    with jax.set_mesh(session.mesh):
+        eng = session.serve(plan, batch_slots=batch_slots, max_seq=max_seq,
+                            seed=seed)
         rng = np.random.default_rng(seed)
         for rid in range(n_requests):
             eng.submit(Request(

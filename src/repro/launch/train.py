@@ -1,67 +1,30 @@
 """Training driver: ``python -m repro.launch.train --arch <id> [...]``.
 
-End-to-end: config -> mesh -> plan -> model -> data pipeline -> jitted
-train step -> checkpoint/restart loop with watchdog.  On this CPU container
-use reduced dims (--scale-down) and a small mesh; on a fleet the same
-driver runs the production mesh (the dry-run proves those shardings).
+A thin CLI over :class:`repro.api.Session`: config -> ``Session.plan``
+(mesh + parallel plan + memory fail-fast) -> ``Session.train_step`` (the
+single dispatcher over the plain/ZeRO, comms, and pipeline paths) ->
+checkpoint/restart loop on the session's persistent device-resident
+state.  On this CPU container use reduced dims (--scale-down) and a small
+mesh; on a fleet the same driver runs the production mesh (the dry-run
+proves those shardings).
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.api import PlanMemoryError, Session
 from repro.checkpoint import CheckpointManager
-from repro.configs import SHAPES, get_config, input_specs
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import scale_config  # noqa: F401  (legacy import site)
 from repro.core import memory as mem_mod
-from repro.core.planner import plan_for
 from repro.data import Pipeline, Stage, SyntheticLM
 from repro.launch import mesh as mesh_mod
-from repro.models import Model
-from repro.train import (AdamWConfig, StepTimeWatchdog, build_train_step,
-                         init_state, state_shardings, warmup_cosine)
-
-
-def scale_config(cfg: ModelConfig, down: int) -> ModelConfig:
-    """Reduced-config variant of an arch (same family/topology)."""
-    if down <= 1:
-        return cfg
-    r = lambda x, m=8: max(m, x // down)
-    kw = dict(
-        n_layers=max(2, cfg.n_layers // down),
-        d_model=r(cfg.d_model, 64),
-        d_ff=r(cfg.d_ff, 64) if cfg.d_ff else 0,
-        vocab_size=max(256, cfg.vocab_size // down),
-    )
-    if cfg.n_heads:
-        heads = max(2, cfg.n_heads // down)
-        kv = max(1, min(cfg.n_kv_heads, heads))
-        kw.update(n_heads=heads, n_kv_heads=kv,
-                  head_dim=max(8, kw["d_model"] // heads))
-    if cfg.n_experts:
-        kw.update(n_experts=max(4, cfg.n_experts // down),
-                  top_k=min(cfg.top_k, 2),
-                  d_ff_expert=r(cfg.d_ff_expert, 32))
-    if cfg.ssm_state:
-        kw.update(ssm_state=max(16, cfg.ssm_state // down),
-                  ssm_head_dim=16)
-    if cfg.attn_every:
-        kw.update(attn_every=2)
-    if cfg.n_vision_tokens:
-        kw.update(n_vision_tokens=16)
-    if cfg.window:
-        kw.update(window=16)
-    return dataclasses.replace(cfg, **kw)
-
-
-class PlanMemoryError(ValueError):
-    """The memory model refused the plan (see validate_plan_memory)."""
+from repro.train import AdamWConfig, StepTimeWatchdog, warmup_cosine
 
 
 def validate_plan_memory(cfg, mesh, *, batch: int, seq: int,
@@ -69,27 +32,17 @@ def validate_plan_memory(cfg, mesh, *, batch: int, seq: int,
                          hbm_gib: Optional[float] = None) -> None:
     """Fail fast when the memory model says the plan cannot fit.
 
-    Runs before anything is traced or compiled: the per-stage footprint
-    model prices the cell against the per-device budget (platform table or
-    ``--hbm-gib`` override) and raises :class:`PlanMemoryError` (a
-    ``ValueError``) with the footprint table instead of letting the step
-    OOM minutes into compilation — the planner's resource-governed refusal
-    applied at the launch surface.  (``main()`` converts exactly this
-    error to a clean exit; programmatic ``run()`` callers get a catchable
-    exception, not SystemExit, and other ValueErrors keep their
-    tracebacks.)
+    Kept as a standalone helper (``Session.plan`` folds the same check
+    in): prices the cell against the per-device budget and raises the
+    structured :class:`repro.api.PlanMemoryError` with the footprint
+    table instead of letting the step OOM minutes into compilation.
     """
     budget = mem_mod.budget_for(mesh, hbm_gib=hbm_gib)
     fps = mem_mod.footprints_for_mesh(
         cfg, mesh, global_batch=batch, seq_len=seq,
         num_microbatches=microbatches, schedule=schedule)
     if not all(f.fits(budget) for f in fps):
-        table = mem_mod.footprint_table(fps, budget)
-        raise PlanMemoryError(
-            f"plan does not fit the per-device memory budget "
-            f"({budget.describe()}); refusing to launch.\n{table}\n"
-            "Raise --hbm-gib, add pipeline stages (--pp), or increase "
-            "--microbatches.")
+        raise PlanMemoryError.for_cell(fps, budget)
     peak = mem_mod.peak_stage_footprint(fps)
     print(f"memory model: predicted peak {peak.total / mem_mod.GIB:.3f} "
           f"GiB/device vs {budget.describe()} -> fits")
@@ -101,65 +54,38 @@ def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
         resume: bool = False, mesh=None, log_every: int = 10,
         seed: int = 0, comms: str = "auto", pp: int = 1,
         pp_schedule: str = "gpipe", hbm_gib: Optional[float] = None):
-    cfg = scale_config(get_config(arch), scale_down)
-    mesh = mesh or mesh_mod.make_host_mesh(pp)
-    plan = plan_for(cfg, mesh)
-    validate_plan_memory(cfg, mesh, batch=batch, seq=seq,
-                         microbatches=microbatches, schedule=pp_schedule,
-                         hbm_gib=hbm_gib)
-    model = Model(cfg, mesh, plan, q_chunk=64, kv_chunk=128, ssd_chunk=32)
-    pipelined = mesh.shape.get("pipe", 1) > 1
-
-    # Route gradient sync through the planner's cost-model-chosen
-    # repro.comms schedule when the cell is pure-DP (possibly x PP — the
-    # explicit paths' domain); TP/hybrid cells keep GSPMD's implicit
-    # collectives.
-    comms_plan = None
-    if comms != "off":
-        dp_only = all(n == 1 for a, n in mesh.shape.items()
-                      if a not in plan.batch_axes + ("pipe",))
-        if dp_only:
-            comms_plan = plan.comms
-            print(f"comms: grad sync via {comms_plan.schedule} schedule "
-                  f"(bucket {comms_plan.bucket_bytes >> 20} MiB)")
-
+    session = Session(mesh=mesh if mesh is not None
+                      else mesh_mod.make_host_mesh(pp), hbm_gib=hbm_gib)
     adamw = AdamWConfig(lr=warmup_cosine(lr, steps // 10 + 1, steps))
-    if pipelined:
-        from repro.pipeline import pipeline_state_shardings
-        from repro.train import build_pipeline_train_step
+    plan = session.plan(
+        arch, batch=batch, seq=seq, microbatches=microbatches,
+        pp_schedule=pp_schedule, comms=comms, adamw=adamw,
+        scale_down=scale_down,
+        model_kwargs=dict(q_chunk=64, kv_chunk=128, ssd_chunk=32))
+    cfg = plan.cfg
 
-        spec = dataclasses.replace(
-            plan.pipeline, schedule=pp_schedule,
-            num_microbatches=max(1, microbatches))
+    peak = mem_mod.peak_stage_footprint(plan.footprints)
+    print(f"memory model: predicted peak {peak.total / mem_mod.GIB:.3f} "
+          f"GiB/device vs {plan.budget.describe()} -> fits")
+    if plan.comms is not None:
+        print(f"comms: grad sync via {plan.comms.schedule} schedule "
+              f"(bucket {plan.comms.bucket_bytes >> 20} MiB)")
+    if plan.pipeline is not None:
+        spec = plan.pipeline
         print(f"pipeline: {spec.n_stages} stages ({spec.schedule}), "
               f"{spec.num_microbatches} microbatches, "
               f"bubble {spec.bubble_fraction():.2f}")
-        train_step = build_pipeline_train_step(model, mesh, adamw,
-                                               pipeline=spec,
-                                               comms=comms_plan)
-        st_sh = pipeline_state_shardings(model, mesh, spec, adamw)
-    else:
-        spec = None
-        train_step = build_train_step(model, mesh, adamw,
-                                      num_microbatches=microbatches,
-                                      comms=comms_plan)
-        st_sh = {"params": model.param_shardings(),
-                 "opt": state_shardings(model, mesh)["opt"]}
 
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
     start_step = 0
-    with jax.set_mesh(mesh):
+    with jax.set_mesh(session.mesh):
         if resume and mgr is not None and mgr.latest_step() is not None:
-            state = mgr.restore(shardings=st_sh)
+            state = mgr.restore(shardings=plan.state_shardings())
             start_step = int(jax.device_get(state["opt"]["step"]))
+            session.put("train_state", state, kind="train_state")
             print(f"resumed from step {start_step}")
-        elif pipelined:
-            from repro.pipeline import pipeline_init_state
-            state = pipeline_init_state(model, mesh, spec,
-                                        jax.random.PRNGKey(seed))
         else:
-            state = dataclasses.asdict(init_state(model, mesh,
-                                                  jax.random.PRNGKey(seed)))
+            session.init_state(plan, seed=seed)
 
         source = SyntheticLM(cfg.vocab_size, batch, seq, seed=seed,
                              structured=True)
@@ -178,15 +104,14 @@ def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
             stages = []
         pipe = Pipeline(source, stages, n_threads=2).start()
 
-        jstep = jax.jit(train_step, donate_argnums=(0,))
         dog = StepTimeWatchdog()
         losses = []
         try:
             for i in range(start_step, steps):
                 batch_np = next(pipe)
                 t0 = time.perf_counter()
-                state, metrics = jstep(state, jax.tree.map(jnp.asarray,
-                                                           batch_np))
+                metrics = session.step(plan, jax.tree.map(jnp.asarray,
+                                                          batch_np))
                 loss = float(jax.device_get(metrics["loss"]))
                 dt = time.perf_counter() - t0
                 losses.append(loss)
@@ -197,9 +122,9 @@ def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
                     print(f"step {i + 1:5d} loss {loss:.4f} "
                           f"({dt * 1e3:.0f} ms)")
                 if mgr is not None and (i + 1) % ckpt_every == 0:
-                    mgr.save(i + 1, state)
+                    mgr.save(i + 1, session.get("train_state"))
             if mgr is not None:
-                mgr.save(steps, state, blocking=True)
+                mgr.save(steps, session.get("train_state"), blocking=True)
         finally:
             pipe.stop()
     return losses

@@ -29,9 +29,39 @@ class Request:
     done: bool = False
 
 
+def _make_prefill_fn(model):
+    """Prefill-one-slot step closing over the MODEL only.
+
+    A free function (not an Engine method) on purpose: the jitted
+    callable may outlive its engine in a Session's compiled-artifact
+    cache, and a bound method would pin that engine's params and full KV
+    cache for the cache's lifetime.
+    """
+
+    def prefill_slot(params, cache, tokens, slot):
+        """Prefill one request into cache row ``slot`` (B=1 forward)."""
+        logits, c1 = model.prefill(params, tokens)
+
+        def write(full, one):
+            # one: (L, 1, S, ...) -> pad S to T, write at [.., slot, ..]
+            pad = [(0, 0)] * one.ndim
+            pad[2] = (0, full.shape[2] - one.shape[2])
+            if one.ndim >= 3 and full.shape[2] != one.shape[2] \
+                    and full.ndim == one.ndim:
+                one = jnp.pad(one, pad)
+            return jax.lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), slot, axis=1)
+
+        cache = jax.tree.map(write, cache, c1)
+        return logits[:, -1, :], cache
+
+    return prefill_slot
+
+
 class Engine:
     def __init__(self, model, params, batch_slots: int, max_seq: int,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 opcache=None, registry=None, cache_key: str = None):
         self.model = model
         self.params = params
         self.B = batch_slots
@@ -44,25 +74,38 @@ class Engine:
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
 
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
-        self._prefill_one = jax.jit(self._prefill_slot_fn)
+        # ``opcache`` (a repro.core.opcache.OpCache, normally the owning
+        # Session's) makes the jitted steps shared compiled artifacts: a
+        # second engine on the same model/slots replays them by id instead
+        # of re-tracing.
+        def _jit(op, build):
+            if opcache is None:
+                return build()
+            mesh = getattr(model, "mesh", None)
+            key = opcache.key_for(
+                op, (), mesh_shape=(tuple(mesh.shape.items())
+                                    if hasattr(mesh, "shape") else ()),
+                model=id(model), B=batch_slots, T=max_seq)
+            return opcache.get_or_build(key, op, build)
+
+        self._decode = _jit("serve_decode", lambda: jax.jit(
+            model.decode_step, donate_argnums=(1,)))
+        self._prefill_one = _jit("serve_prefill", lambda: jax.jit(
+            _make_prefill_fn(model)))
+
+        # Optional write-through to a Session's persistent-state registry:
+        # the fixed-size cache is allocated ONCE (bytes never change), so
+        # the per-tick refresh swaps buffers without re-walking the tree.
+        self._registry = registry
+        self._cache_key = cache_key
+        if registry is not None and cache_key is not None:
+            registry.put(cache_key, self.cache, kind="kv_cache")
+
+    def _publish_cache(self):
+        if self._registry is not None and self._cache_key is not None:
+            self._registry.replace_value(self._cache_key, self.cache)
 
     # ------------------------------------------------------------------
-    def _prefill_slot_fn(self, params, cache, tokens, slot):
-        """Prefill one request into cache row ``slot`` (B=1 forward)."""
-        logits, c1 = self.model.prefill(params, tokens)
-        def write(full, one):
-            # one: (L, 1, S, ...) -> pad S to T, write at [.., slot, ..]
-            pad = [(0, 0)] * one.ndim
-            pad[2] = (0, full.shape[2] - one.shape[2])
-            if one.ndim >= 3 and full.shape[2] != one.shape[2] \
-                    and full.ndim == one.ndim:
-                one = jnp.pad(one, pad)
-            return jax.lax.dynamic_update_slice_in_dim(
-                full, one.astype(full.dtype), slot, axis=1)
-        cache = jax.tree.map(write, cache, c1)
-        return logits[:, -1, :], cache
-
     def submit(self, req: Request):
         self.queue.append(req)
 
@@ -78,6 +121,7 @@ class Engine:
                 req.out.append(int(nxt))
                 self.active[b] = req
                 self.pos[b] = len(req.prompt)
+        self._publish_cache()
 
     def _sample(self, logits):
         if self.temperature == 0.0:
@@ -103,6 +147,7 @@ class Engine:
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(pos, jnp.int32))
+        self._publish_cache()
         nxt = self._sample(logits[:, 0, :])
         n_active = 0
         for b, r in enumerate(self.active):

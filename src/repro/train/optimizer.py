@@ -67,16 +67,25 @@ def state_specs(param_specs, mesh,
 def init_state(params, param_specs, mesh):
     """Optimizer state from existing (already initialized) params."""
     is_p = lambda x: isinstance(x, ParamSpec)
-    zeros = jax.tree.map(
-        lambda p, s: jnp.zeros(p.shape, jnp.float32),
-        params, param_specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    # Each slot gets its OWN buffers: ``jax.device_put`` is a no-op when
+    # the sharding already matches (and ``astype`` when the dtype does),
+    # so sharing ``zeros`` between mu and nu — or handing params'
+    # fp32 buffers to master — would alias them and break the donated
+    # in-place train step ("attempt to donate the same buffer twice").
+    def fresh_zeros():
+        return jax.tree.map(
+            lambda p, s: jnp.zeros(p.shape, jnp.float32),
+            params, param_specs, is_leaf=is_p)
+
     shardings = jax.tree.map(
         lambda s: _zero_spec(s, mesh).sharding(mesh), param_specs,
         is_leaf=is_p)
-    mu = jax.device_put(zeros, shardings)
-    nu = jax.device_put(zeros, shardings)
+    mu = jax.device_put(fresh_zeros(), shardings)
+    nu = jax.device_put(fresh_zeros(), shardings)
     master = jax.device_put(
-        jax.tree.map(lambda p: p.astype(jnp.float32), params), shardings)
+        jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True),
+                     params), shardings)
     return {"step": jnp.zeros((), jnp.int32), "mu": mu, "nu": nu,
             "master": master}
 

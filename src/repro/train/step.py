@@ -1,13 +1,23 @@
-"""Train-step builder: microbatched grad accumulation + AdamW + donation.
+"""Train-step implementations: microbatched grad accumulation + AdamW +
+donation.
 
 The jitted step is the whole-program unit the dry-run lowers: params enter
 in storage layout, optimizer state in ZeRO layout, the batch in DP layout.
 Buffer donation makes the update in-place (dMath §2.1 memory pooling).
+
+The three path implementations (``_gspmd_train_step``,
+``_comms_train_step``, ``_pipeline_train_step``) are selected by ONE
+dispatcher — :func:`repro.api.session.dispatch_train_step`, whose
+capability matrix lives in :data:`repro.api.CAPABILITIES`.  The historical
+``build_*_train_step`` entry points below are deprecation shims that
+delegate through that dispatcher with their legacy path pinned; new code
+goes through :meth:`repro.api.Session.train_step`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -63,29 +73,19 @@ def _split_microbatches(batch, n: int):
     return jax.tree.map(split, batch)
 
 
-def build_train_step(
+def _gspmd_train_step(
     model,
     mesh,
     adamw: Optional[opt.AdamWConfig] = None,
     num_microbatches: int = 1,
-    comms=None,
 ) -> Callable:
-    """Returns train_step(state_dict, batch) -> (state_dict, metrics).
+    """The plain/ZeRO (GSPMD) path: train_step(state, batch).
 
     Grad accumulation runs as a ``lax.scan`` over microbatches with fp32
     accumulators in param layout (ZeRO-2 cadence: each microbatch's psum
     over the batch axes is emitted by GSPMD; the accumulator stays sharded
     wherever the params are).
-
-    ``comms`` (a :class:`repro.comms.CommsPlan`) switches gradient
-    synchronization from GSPMD's implicit psum to the explicit schedules in
-    :mod:`repro.comms` — bucketed, optionally compressed, ring/tree/
-    hierarchical all-reduces over the batch axes.  See
-    :func:`build_comms_train_step` for the restrictions.
     """
-    if comms is not None:
-        return build_comms_train_step(model, mesh, adamw, num_microbatches,
-                                      comms)
     adamw = adamw or opt.AdamWConfig()
     pspecs = model.param_specs()
     from repro.core.layout import constrain
@@ -136,7 +136,7 @@ def build_train_step(
     return train_step
 
 
-def build_comms_train_step(
+def _comms_train_step(
     model,
     mesh,
     adamw: Optional[opt.AdamWConfig] = None,
@@ -220,7 +220,7 @@ def build_comms_train_step(
     return train_step
 
 
-def build_pipeline_train_step(
+def _pipeline_train_step(
     model,
     mesh,
     adamw: Optional[opt.AdamWConfig] = None,
@@ -240,7 +240,7 @@ def build_pipeline_train_step(
     :class:`repro.comms.CommsPlan` to route the DP all-reduce through the
     explicit bucketed schedules, otherwise a plain ``pmean`` runs.
 
-    Restriction (same as :func:`build_comms_train_step`): every mesh axis
+    Restriction (same as :func:`_comms_train_step`): every mesh axis
     other than the batch axes and ``pipe`` must have size 1 — the pipe
     axis needs manual ppermute placement, so TP stays a cost-model-level
     composition (see ``core/planner.py``).
@@ -313,6 +313,75 @@ def build_pipeline_train_step(
         return {"params": new_params, "opt": new_opt}, metrics
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# Legacy entry points — deprecation shims over the ONE dispatcher
+# (repro.api.session.dispatch_train_step).  Each pins its historical path,
+# so behavior (including the axis-restriction errors) is bit-identical to
+# the pre-Session builders; they only add the warning.
+# ---------------------------------------------------------------------------
+
+_DEPRECATED = ("%s is deprecated: build train steps through "
+               "repro.api.Session.train_step (the single dispatcher over "
+               "the plain/ZeRO, comms, and pipeline paths); this shim "
+               "delegates through the same dispatcher")
+
+
+def build_train_step(
+    model,
+    mesh,
+    adamw: Optional[opt.AdamWConfig] = None,
+    num_microbatches: int = 1,
+    comms=None,
+) -> Callable:
+    """Deprecated: use :meth:`repro.api.Session.train_step`.
+
+    Delegates through :func:`repro.api.session.dispatch_train_step` with
+    the legacy selection rule (``comms`` given -> explicit-comms path,
+    else the plain/ZeRO GSPMD path).
+    """
+    warnings.warn(_DEPRECATED % "build_train_step", DeprecationWarning,
+                  stacklevel=2)
+    from repro.api.session import dispatch_train_step
+    return dispatch_train_step(
+        model, mesh, adamw=adamw, num_microbatches=num_microbatches,
+        comms=comms, path="comms" if comms is not None else "gspmd")
+
+
+def build_comms_train_step(
+    model,
+    mesh,
+    adamw: Optional[opt.AdamWConfig] = None,
+    num_microbatches: int = 1,
+    comms=None,
+) -> Callable:
+    """Deprecated: use :meth:`repro.api.Session.train_step` with a plan
+    whose ``comms`` is a :class:`repro.comms.CommsPlan`."""
+    warnings.warn(_DEPRECATED % "build_comms_train_step",
+                  DeprecationWarning, stacklevel=2)
+    from repro.api.session import dispatch_train_step
+    return dispatch_train_step(
+        model, mesh, adamw=adamw, num_microbatches=num_microbatches,
+        comms=comms, path="comms")
+
+
+def build_pipeline_train_step(
+    model,
+    mesh,
+    adamw: Optional[opt.AdamWConfig] = None,
+    num_microbatches: Optional[int] = None,
+    pipeline=None,
+    comms=None,
+) -> Callable:
+    """Deprecated: use :meth:`repro.api.Session.train_step` on a mesh with
+    a ``pipe`` axis."""
+    warnings.warn(_DEPRECATED % "build_pipeline_train_step",
+                  DeprecationWarning, stacklevel=2)
+    from repro.api.session import dispatch_train_step
+    return dispatch_train_step(
+        model, mesh, adamw=adamw, num_microbatches=num_microbatches,
+        comms=comms, pipeline=pipeline, path="pipeline")
 
 
 def jit_train_step(model, mesh, train_step, batch_shardings):

@@ -44,6 +44,8 @@ SUITES: Dict[str, Tuple[str, int, str]] = {
         ("REPRO_REDIST_CHILD", 8, "test_redistribute_dtype_subprocess"),
     "test_memory_model.py":
         ("REPRO_MEM_FAKE_DEVICES", 8, "test_memory_model_suite_subprocess"),
+    "test_api_session.py":
+        ("REPRO_API_FAKE_DEVICES", 8, "test_api_session_subprocess"),
 }
 
 _JOIN_TO_SUITE = {join: base for base, (_v, _n, join) in SUITES.items()}
@@ -58,6 +60,49 @@ _dryrun_outdirs: Dict[str, str] = {}
 
 _procs: Dict[str, subprocess.Popen] = {}
 _outfiles: Dict[str, str] = {}
+
+#: Persistent XLA compilation cache, keyed PER TEST CELL (the ROADMAP
+#: tier-1 wall-time lever): each child suite / dry-run cell gets its own
+#: directory under the base so concurrent children never contend on the
+#: same entries, and a re-run (locally or via the CI cache restore) loads
+#: yesterday's executables instead of recompiling them.
+#:
+#: REPRO_XLA_CACHE_DIR=<dir> forces the cache ON at <dir>; =off disables
+#: it; unset -> auto.  Auto DISABLES the cache on the CPU backend below
+#: jaxlib 0.5: deserialized XLA:CPU executables are broken there
+#: (jaxlib 0.4.36 segfaults/heap-corrupts on the first cache hit of a
+#: donated train step — reproducible with any two identical jits), so the
+#: wiring stays dormant on this container and lights up unchanged on real
+#: accelerators or a newer pin.
+_XLA_CACHE_BASE = os.environ.get(
+    "REPRO_XLA_CACHE_DIR",
+    os.path.join(_TESTS_DIR, "..", ".cache", "xla"))
+
+
+def _cache_supported() -> bool:
+    if _XLA_CACHE_BASE == "off":
+        return False
+    if os.environ.get("REPRO_XLA_CACHE_DIR"):
+        return True                       # explicit opt-in wins
+    try:
+        import jax
+        import jaxlib
+        ver = tuple(int(x) for x in jaxlib.__version__.split(".")[:2])
+        return jax.default_backend() != "cpu" or ver >= (0, 5)
+    except Exception:
+        return False
+
+
+def compile_cache_env(cell: str) -> Dict[str, str]:
+    """Env vars enabling the per-cell persistent compilation cache."""
+    if not _cache_supported():
+        return {}
+    d = os.path.join(os.path.abspath(_XLA_CACHE_BASE), cell)
+    try:
+        os.makedirs(d, exist_ok=True)
+    except OSError:
+        return {}
+    return {"JAX_COMPILATION_CACHE_DIR": d}
 
 
 @atexit.register
@@ -97,6 +142,7 @@ def launch_dryrun_cells(only: Optional[str] = None) -> None:
             continue
         _dryrun_outdirs[key] = tempfile.mkdtemp(prefix=key + "_")
         env = dict(os.environ)
+        env.update(compile_cache_env(key))
         env["PYTHONPATH"] = os.pathsep.join(
             [_SRC] + env.get("PYTHONPATH", "").split(os.pathsep))
         cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
@@ -121,6 +167,7 @@ def launch(basename: str, markexpr: Optional[str] = None) -> None:
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
                         + f" --xla_force_host_platform_device_count={devs}")
     env[var] = str(devs)
+    env.update(compile_cache_env(var.lower()))
     env["PYTHONPATH"] = os.pathsep.join(
         [_SRC] + env.get("PYTHONPATH", "").split(os.pathsep))
     cmd = [sys.executable, "-m", "pytest", "-q", "-x",

@@ -11,9 +11,23 @@ list (pytest's -k/-m deselection hook runs first), so filtered runs and
 ``_childsuite.launch`` prevents recursion.
 """
 
+import os
+import sys
+
 import pytest
 
 import _childsuite
+
+# Persistent XLA compilation cache for the PARENT process (children get
+# their own per-cell directory in _childsuite.launch).  Set before jax
+# initializes so the env var is picked up; if a plugin imported jax
+# first, update the live config too.  setdefault: an explicit
+# JAX_COMPILATION_CACHE_DIR from the caller wins.
+for _k, _v in _childsuite.compile_cache_env("parent").items():
+    os.environ.setdefault(_k, _v)
+    if "jax" in sys.modules:
+        import jax
+        jax.config.update("jax_compilation_cache_dir", os.environ[_k])
 
 
 @pytest.hookimpl(trylast=True)

@@ -1,0 +1,363 @@
+"""Session API: dispatcher selection, shim equivalence, persistent state.
+
+Parent-process tests cover the pure surface — the capability matrix, the
+``select_path`` dispatch rule, the structured :class:`PlanMemoryError`
+(one exception listing per-candidate refusal reasons), and the registry
+satellites (locked anonymous names + evict/clear on ``TensorRegistry``,
+footprint-accounted ``StateRegistry``).
+
+The equivalence battery runs in a child process with 8 fake host devices
+(same pattern as test_pipeline.py): for each (dp, tp, pp) corner the
+``Session.train_step`` dispatcher must pick the documented path AND match
+the legacy ``build_*_train_step`` shims bit-for-bit — same losses, same
+first-step grad norm — while the persistent state registry survives
+repeated ``Session.step`` calls without the caller ever re-putting (or
+re-donating) state.
+"""
+
+import os
+
+import pytest
+
+DEVS = 8
+
+
+def _in_child() -> bool:
+    return os.environ.get("REPRO_API_FAKE_DEVICES") == str(DEVS)
+
+
+# --------------------------------------------------------------------------
+# parent-process tests: matrix, dispatch rule, structured errors, registries
+# --------------------------------------------------------------------------
+
+if not _in_child():
+    from repro.api import (CAPABILITIES, PlanMemoryError, StateRegistry,
+                           capability_table, select_path)
+
+    class _M:
+        def __init__(self, **shape):
+            self.shape = shape
+
+    def test_capability_matrix_documents_three_paths():
+        assert set(CAPABILITIES) == {"gspmd", "comms", "pipeline"}
+        for cap in CAPABILITIES.values():
+            assert {"title", "axes", "schedules", "grad_sync",
+                    "selected_when"} <= set(cap)
+        table = capability_table()
+        for key in CAPABILITIES:
+            assert f"`{key}`" in table
+
+    def test_select_path_corners():
+        # (dp, tp, pp) corners -> documented path
+        assert select_path(_M(data=8, model=1)) == "gspmd"
+        assert select_path(_M(data=8, model=1), comms=object()) == "comms"
+        assert select_path(_M(data=4, model=2)) == "gspmd"
+        assert select_path(_M(data=2, pipe=4, model=1)) == "pipeline"
+        # pipe wins over comms: the pipeline step composes the CommsPlan
+        assert select_path(_M(data=2, pipe=2, model=1),
+                           comms=object()) == "pipeline"
+        # explicit PipelineSpec forces the pipeline path on any mesh
+        assert select_path(_M(data=8, model=1),
+                           pipeline=object()) == "pipeline"
+        assert select_path(_M(pod=2, data=4, model=1)) == "gspmd"
+
+    def test_plan_raises_one_structured_error_on_all_refused_sweep():
+        import jax
+
+        from repro.api import Session
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((1, 1), ("data", "model"))
+        sess = Session(mesh=mesh, hbm_gib=0.01)     # nothing fits 10 MiB
+        with pytest.raises(PlanMemoryError) as ei:
+            sess.plan("qwen2-0.5b", batch=8, seq=256, scale_down=8,
+                      sweep=True)
+        e = ei.value
+        # structured: every refused (dp, tp, pp, M) candidate with reason
+        assert e.refused, "refusal reasons must be attached"
+        assert all(len(k) == 4 for k in e.refused)
+        assert all("GiB" in v for v in e.refused.values())
+        msg = str(e)
+        assert "all candidates refused" in msg
+        assert "(dp=1, tp=1, pp=1" in msg
+        assert e.budget is not None
+
+    def test_plan_fail_fast_carries_footprint_table():
+        from repro.api import Session
+        from repro.launch.mesh import make_mesh
+
+        sess = Session(mesh=make_mesh((1, 1), ("data", "model")),
+                       hbm_gib=0.01)
+        with pytest.raises(PlanMemoryError) as ei:
+            sess.plan("qwen2-0.5b", batch=8, seq=256, scale_down=8)
+        e = ei.value
+        assert e.footprints, "per-stage footprints must be attached"
+        assert "does not fit the per-device memory budget" in str(e)
+        # the launch-surface hint is part of the one canonical formatting
+        assert "--hbm-gib" in str(e)
+
+    def test_tensor_registry_locked_anon_names_and_evict():
+        import threading
+
+        from repro.core.dtensor import TensorRegistry
+
+        reg = TensorRegistry()
+        names, errs = [], []
+
+        def mint(n):
+            try:
+                got = [reg.next_anon() for _ in range(n)]
+                names.extend(got)
+            except Exception as exc:  # pragma: no cover
+                errs.append(exc)
+
+        threads = [threading.Thread(target=mint, args=(200,))
+                   for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs
+        assert len(names) == len(set(names)) == 1600
+
+        from repro.core.layout import Layout
+        reg.register("w", (4, 4), "float32", Layout.replicated(2))
+        assert "w" in reg and len(reg) == 1
+        assert reg.evict("w") and "w" not in reg
+        assert not reg.evict("w")              # second evict: no-op
+        reg.register("a", (2,), "float32", Layout.replicated(1))
+        reg.register("b", (2,), "float32", Layout.replicated(1))
+        reg.clear()
+        assert len(reg) == 0
+
+    def test_state_registry_accounting_and_eviction():
+        import numpy as np
+
+        from repro.core.memory import MemoryBudget
+
+        reg = StateRegistry(budget=MemoryBudget(4096, headroom=1.0),
+                            n_devices=1)
+        small = {"w": np.zeros(256, np.float32)}       # 1 KiB
+        reg.put("a", small)
+        assert reg.total_bytes() == 1024
+        reg.put("b", small, kind="params")
+        assert reg.total_bytes() == 2048
+        assert reg.entry("b").kind == "params"
+        # overwrite re-accounts instead of double-counting
+        reg.put("a", {"w": np.zeros(512, np.float32)})
+        assert reg.total_bytes() == 2048 + 1024
+        with pytest.raises(PlanMemoryError, match="evict"):
+            reg.put("c", {"w": np.zeros(1024, np.float32)})
+        assert "c" not in reg
+        got = reg.evict("a")
+        assert got["w"].nbytes == 2048
+        assert reg.evict("a") is None
+        reg.put("c", {"w": np.zeros(512, np.float32)})  # now it fits
+        # update enforces the same capacity bound as put ...
+        with pytest.raises(PlanMemoryError, match="evict"):
+            reg.update("c", {"w": np.zeros(1024, np.float32)})
+        # ... and replace_value swaps buffers without re-accounting
+        # (fixed-size hot-path refresh: KV caches)
+        before = reg.entry("c").nbytes
+        reg.replace_value("c", {"w": np.ones(512, np.float32)})
+        assert reg.entry("c").nbytes == before
+        assert reg.get("c")["w"][0] == 1.0
+        with pytest.raises(KeyError):
+            reg.get("missing")
+        with pytest.raises(KeyError):
+            reg.update("missing", small)
+        with pytest.raises(KeyError):
+            reg.replace_value("missing", small)
+        reg.clear()
+        assert len(reg) == 0 and reg.total_bytes() == 0
+
+    # ---- the equivalence battery, in a child with 8 fake devices --------
+    def test_api_session_subprocess():
+        import _childsuite
+        rc, out = _childsuite.join("test_api_session.py", timeout=900)
+        if rc != 0:
+            pytest.fail("child failed:\n" + out)
+
+else:
+    import dataclasses
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.api import Session
+    from repro.comms import CommsPlan
+    from repro.configs.base import ModelConfig
+    from repro.core.planner import plan_for
+    from repro.models import Model
+    from repro.pipeline import pipeline_init_state
+    from repro.train import (AdamWConfig, build_pipeline_train_step,
+                             build_train_step, init_state)
+    from repro.train.step import build_comms_train_step
+
+    TINY = ModelConfig(name="api-tiny", family="dense", n_layers=4,
+                       d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                       d_ff=64, vocab_size=64)
+    B, SEQ, MB = 8, 16, 2
+    STEPS = 2
+    MODEL_KW = dict(q_chunk=16, kv_chunk=16)
+
+    def _batch():
+        rng = np.random.RandomState(0)
+        toks = rng.randint(0, TINY.vocab_size, (B, SEQ + 1)).astype(np.int32)
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+    def _adamw():
+        return AdamWConfig(lr=1e-2, weight_decay=0.0)
+
+    def _mesh(shape, axes):
+        n = int(np.prod(shape))
+        return Mesh(np.array(jax.devices()[:n]).reshape(shape), axes)
+
+    _COMMS = CommsPlan(schedule="ring", bucket_bytes=1 << 16)
+
+    def _run(step_fn, state, batch):
+        losses, gnorm0 = [], None
+        for _ in range(STEPS):
+            state, m = step_fn(state, batch)
+            losses.append(float(m["loss"]))
+            if gnorm0 is None:
+                gnorm0 = float(m["grad_norm"])
+        return losses, gnorm0
+
+    # ---- legacy trajectories (deprecation shims, donated like launch) ----
+    @functools.lru_cache(maxsize=None)
+    def _legacy(cell):
+        batch = _batch()
+        if cell == "gspmd":
+            mesh = _mesh((2, 1), ("data", "model"))
+            with jax.set_mesh(mesh):
+                model = Model(TINY, mesh, plan_for(TINY, mesh), **MODEL_KW)
+                with pytest.warns(DeprecationWarning, match="Session"):
+                    ts = build_train_step(model, mesh, _adamw(),
+                                          num_microbatches=MB)
+                st = init_state(model, mesh, jax.random.PRNGKey(0))
+                state = {"params": st.params, "opt": st.opt}
+                return _run(jax.jit(ts, donate_argnums=(0,)), state, batch)
+        if cell == "comms":
+            mesh = _mesh((2, 1), ("data", "model"))
+            with jax.set_mesh(mesh):
+                model = Model(TINY, mesh, plan_for(TINY, mesh), **MODEL_KW)
+                with pytest.warns(DeprecationWarning, match="Session"):
+                    ts = build_comms_train_step(model, mesh, _adamw(),
+                                                num_microbatches=MB,
+                                                comms=_COMMS)
+                st = init_state(model, mesh, jax.random.PRNGKey(0))
+                state = {"params": st.params, "opt": st.opt}
+                return _run(jax.jit(ts, donate_argnums=(0,)), state, batch)
+        assert cell == "pipeline"
+        mesh = _mesh((2, 2, 1), ("data", "pipe", "model"))
+        with jax.set_mesh(mesh):
+            plan = plan_for(TINY, mesh)
+            spec = dataclasses.replace(plan.pipeline, schedule="gpipe",
+                                       num_microbatches=MB)
+            model = Model(TINY, mesh, plan, **MODEL_KW)
+            with pytest.warns(DeprecationWarning, match="Session"):
+                ts = build_pipeline_train_step(model, mesh, _adamw(),
+                                               pipeline=spec)
+            state = pipeline_init_state(model, mesh, spec,
+                                        jax.random.PRNGKey(0))
+            return _run(jax.jit(ts, donate_argnums=(0,)), state, batch)
+
+    # ---- Session trajectories (memoized: several tests share a cell) -----
+    @functools.lru_cache(maxsize=None)
+    def _session(cell):
+        if cell == "gspmd":
+            sess = Session(mesh=_mesh((2, 1), ("data", "model")))
+            plan = sess.plan(TINY, batch=B, seq=SEQ, microbatches=MB,
+                             comms="off", adamw=_adamw(),
+                             model_kwargs=MODEL_KW)
+            assert plan.path == "gspmd"
+        elif cell == "comms":
+            sess = Session(mesh=_mesh((2, 1), ("data", "model")))
+            plan = sess.plan(TINY, batch=B, seq=SEQ, microbatches=MB,
+                             comms=_COMMS, adamw=_adamw(),
+                             model_kwargs=MODEL_KW)
+            assert plan.path == "comms"
+        else:
+            assert cell == "pipeline"
+            sess = Session(mesh=_mesh((2, 2, 1), ("data", "pipe", "model")))
+            plan = sess.plan(TINY, batch=B, seq=SEQ, microbatches=MB,
+                             comms="off", pp_schedule="gpipe",
+                             adamw=_adamw(), model_kwargs=MODEL_KW)
+            assert plan.path == "pipeline"
+            assert plan.pipeline.num_microbatches == MB
+        batch = _batch()
+        with jax.set_mesh(sess.mesh):
+            sess.init_state(plan, seed=0)
+            losses, gnorm0 = [], None
+            for _ in range(STEPS):
+                m = sess.step(plan, batch)
+                losses.append(float(m["loss"]))
+                if gnorm0 is None:
+                    gnorm0 = float(m["grad_norm"])
+        return sess, plan, losses, gnorm0
+
+    # ---- shim equivalence: bit-identical losses per path ----------------
+    @pytest.mark.parametrize("cell", ["gspmd", "comms", "pipeline"])
+    def test_session_matches_legacy_builder_bitwise(cell):
+        legacy_losses, legacy_gnorm = _legacy(cell)
+        _, _, losses, gnorm = _session(cell)
+        np.testing.assert_array_equal(losses, legacy_losses, err_msg=cell)
+        np.testing.assert_array_equal(gnorm, legacy_gnorm, err_msg=cell)
+
+    # ---- dispatcher corners ---------------------------------------------
+    def test_dispatcher_rejects_undispatchable_hybrid():
+        # (dp=2, tp=2, pp=2): the matrix says pipeline is DP x PP only —
+        # the dispatcher selects the pipeline path and the builder refuses
+        # the model axis with its documented error.
+        sess = Session(mesh=_mesh((2, 2, 2), ("data", "pipe", "model")))
+        plan = sess.plan(TINY, batch=B, seq=SEQ, comms="off",
+                         model_kwargs=MODEL_KW)
+        assert plan.path == "pipeline"
+        with pytest.raises(ValueError, match="size 1"):
+            sess.train_step(plan)
+
+    def test_dispatcher_auto_comms_only_on_pure_dp():
+        # comms="auto" on a TP mesh must stay on the GSPMD path
+        sess = Session(mesh=_mesh((4, 2), ("data", "model")))
+        plan = sess.plan(TINY, batch=B, seq=SEQ, comms="auto",
+                         model_kwargs=MODEL_KW)
+        assert plan.path == "gspmd" and plan.comms is None
+        # ... and on a pure-DP mesh it routes through the planner's choice
+        sess2 = Session(mesh=_mesh((8, 1), ("data", "model")))
+        plan2 = sess2.plan(TINY, batch=B, seq=SEQ, comms="auto",
+                           model_kwargs=MODEL_KW)
+        assert plan2.path == "comms" and plan2.comms is not None
+
+    # ---- persistent device-resident state -------------------------------
+    def test_state_survives_steps_without_redonation():
+        sess, plan, _, _ = _session("gspmd")
+        batch = _batch()
+        before = sess.get("train_state")
+        with jax.set_mesh(sess.mesh):
+            m1 = sess.step(plan, batch)
+            m2 = sess.step(plan, batch)
+        # the donated-in buffers died inside the step...
+        assert all(x.is_deleted()
+                   for x in jax.tree.leaves(before["params"]))
+        # ...but the registry entry stayed current and alive
+        after = sess.get("train_state")
+        assert all(not x.is_deleted()
+                   for x in jax.tree.leaves(after["params"]))
+        assert float(m2["loss"]) != float(m1["loss"])
+        # footprint accounting tracks the resident bytes
+        assert sess.state.entry("train_state").nbytes > 0
+        # one compile, every later call a cache hit
+        stats = sess.opcache.stats()["train_step"]
+        assert stats.compiles == 1 and stats.hits >= 3
+
+    def test_evict_frees_accounting_and_get_raises():
+        sess, plan, _, _ = _session("comms")
+        assert sess.evict("train_state") is not None
+        assert len(sess.state) == 0
+        with pytest.raises(KeyError, match="train_state"):
+            sess.step(plan, _batch())
