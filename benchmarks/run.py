@@ -10,6 +10,8 @@
                 and stage-boundary bytes (8 fake devices)
   memory_model  core/memory per-stage footprint vs compiled
                 memory_analysis(); 1F1B ring vs all-M stash (8 fake devices)
+  step_metrics  repro.obs: instrumented train run -> JSONL stream +
+                BENCH_step_metrics.json drift snapshot (8 fake devices)
   kernels       Pallas kernels (interpret) vs oracles
   roofline      §Roofline summary from the dry-run artifacts (if present)
 
@@ -28,6 +30,7 @@ MULTIDEV = {"gemm": "benchmarks.gemm_layouts",
             "collectives": "benchmarks.collectives_bench",
             "pipeline_parallel": "benchmarks.pipeline_parallel_bench",
             "memory_model": "benchmarks.memory_model_bench",
+            "step_metrics": "benchmarks.step_metrics_bench",
             "table1": "benchmarks.table1"}
 LOCAL = {"precision": "benchmarks.precision_bench",
          "pipeline": "benchmarks.pipeline_bench",

@@ -34,6 +34,7 @@ from typing import Any, Callable, Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro import obs as obs_mod
 from repro.configs import (SHAPES, ShapeConfig, default_microbatches,
                            get_config, scale_config)
 from repro.core import memory as mem_mod
@@ -101,7 +102,8 @@ class Session:
                  hbm_gib: Optional[float] = None,
                  opcache: Optional[OpCache] = None,
                  tensors: Optional[TensorRegistry] = None,
-                 state: Optional[StateRegistry] = None):
+                 state: Optional[StateRegistry] = None,
+                 obs: Optional["obs_mod.Obs"] = None):
         from repro.launch import mesh as mesh_mod
         self.mesh = mesh if mesh is not None else mesh_mod.make_host_mesh(pp)
         self.budget = mem_mod.budget_for(self.mesh, hbm_gib=hbm_gib)
@@ -111,17 +113,16 @@ class Session:
         self.state = state if state is not None else StateRegistry(
             budget=self.budget,
             n_devices=math.prod(self.mesh.shape.values()) or 1)
+        # Telemetry: plan/lower/step spans, opcache hit/miss counters and
+        # the resident-bytes gauge all flow through here.  Defaults to the
+        # disabled NULL singleton — with metrics off every instrumented
+        # site is a no-op and numerics/output are unchanged.
+        self.obs = obs if obs is not None else obs_mod.NULL
 
     # ------------------------------------------------------------------
     # planning
     # ------------------------------------------------------------------
-    def plan(self, arch, *, shape: Union[str, ShapeConfig, None] = None,
-             batch: Optional[int] = None, seq: Optional[int] = None,
-             kind: str = "train", microbatches: Optional[int] = None,
-             pp_schedule: str = "gpipe", comms="auto", adamw=None,
-             scale_down: int = 1, model_kwargs=None, plan_kwargs=None,
-             check_memory: bool = True, sweep: bool = False
-             ) -> ExecutablePlan:
+    def plan(self, arch, **kwargs) -> ExecutablePlan:
         """Plan one (config, shape) cell on the session mesh.
 
         Returns a validated :class:`ExecutablePlan`: parallel layouts from
@@ -139,7 +140,34 @@ class Session:
         cost-model-chosen :class:`~repro.comms.CommsPlan` on pure-DP (x PP)
         meshes, ``"off"``/``None`` keeps GSPMD's implicit collectives, and
         an explicit ``CommsPlan`` is used as given.
+
+        See :meth:`_plan` for the keyword signature; this wrapper only
+        adds the ``plan`` telemetry span.
         """
+        name = arch if isinstance(arch, str) else getattr(
+            arch, "name", type(arch).__name__)
+        with self.obs.span("plan", arch=name,
+                           plan_kind=kwargs.get("kind", "train")):
+            plan = self._plan(arch, **kwargs)
+        if self.obs.enabled:
+            self.obs.event(
+                "plan_resolved", arch=plan.cfg.name, shape=plan.shape.name,
+                path=plan.path, microbatches=plan.num_microbatches,
+                schedule=plan.schedule,
+                comms=(plan.comms.schedule if plan.comms is not None
+                       else None),
+                pp=(plan.pipeline.n_stages if plan.pipeline is not None
+                    else 1),
+                fits=plan.fits())
+        return plan
+
+    def _plan(self, arch, *, shape: Union[str, ShapeConfig, None] = None,
+              batch: Optional[int] = None, seq: Optional[int] = None,
+              kind: str = "train", microbatches: Optional[int] = None,
+              pp_schedule: str = "gpipe", comms="auto", adamw=None,
+              scale_down: int = 1, model_kwargs=None, plan_kwargs=None,
+              check_memory: bool = True, sweep: bool = False
+              ) -> ExecutablePlan:
         from repro.models import Model
 
         cfg = get_config(arch) if isinstance(arch, str) else arch
@@ -250,11 +278,13 @@ class Session:
                 f"train_step needs a train plan, got kind={plan.kind!r}")
 
         def build():
-            fn = dispatch_train_step(
-                plan.model, self.mesh, adamw=plan.adamw,
-                num_microbatches=plan.num_microbatches, comms=plan.comms,
-                pipeline=plan.pipeline, path=plan.path)
-            return jax.jit(fn, donate_argnums=(0,)) if jit else fn
+            with self.obs.span("build_step", path=plan.path,
+                               arch=plan.cfg.name):
+                fn = dispatch_train_step(
+                    plan.model, self.mesh, adamw=plan.adamw,
+                    num_microbatches=plan.num_microbatches, comms=plan.comms,
+                    pipeline=plan.pipeline, path=plan.path)
+                return jax.jit(fn, donate_argnums=(0,)) if jit else fn
 
         return self.opcache.get_or_build(
             self._step_key(plan, jit=jit), "train_step", build)
@@ -276,11 +306,30 @@ class Session:
         The state never leaves the device and is never re-put by the
         caller: the donated input buffers die inside the step and the
         registry entry is refreshed with the output state.
+
+        With telemetry on, the step runs under a ``step`` span that
+        blocks on the outputs (so the span times real execution, not
+        dispatch) and the opcache/resident-bytes gauges are refreshed.
         """
         fn = self.train_step(plan)
-        new_state, metrics = fn(self.state.get(name), batch)
+        with self.obs.span("step", path=plan.path) as sp:
+            new_state, metrics = fn(self.state.get(name), batch)
+            sp.block((new_state, metrics))
         self.state.update(name, new_state)
+        if self.obs.enabled:
+            self.publish_metrics()
         return metrics
+
+    def publish_metrics(self) -> None:
+        """Mirror session-owned stats into the obs registry: per-op
+        compiled-artifact cache hit/miss/compile counts and the persistent
+        state registry's resident bytes."""
+        for op, s in self.opcache.stats().items():
+            self.obs.gauge(f"opcache.{op}.hits").set(s.hits)
+            self.obs.gauge(f"opcache.{op}.misses").set(s.misses)
+            self.obs.gauge(f"opcache.{op}.compiles").set(s.compiles)
+        self.obs.gauge("state.resident_bytes").set(self.state.total_bytes())
+        self.obs.gauge("state.entries").set(len(self.state))
 
     def put(self, name: str, value, kind: str = "state"):
         """Make a pytree persistent (footprint-accounted against the
@@ -326,7 +375,9 @@ class Session:
 
             f = self.opcache.get_or_build(
                 self._step_key(plan, sharded=True), "train_step", build)
-            lowered = f.lower(st_sds, b_sds)
+            with self.obs.span("lower", step="train_step",
+                               arch=cfg.name, shape=shape.name):
+                lowered = f.lower(st_sds, b_sds)
             meta = {"step": "train_step", "path": plan.path,
                     "microbatches": plan.num_microbatches,
                     "pp": self.mesh.shape.get("pipe", 1),
@@ -347,7 +398,9 @@ class Session:
             f = self.opcache.get_or_build(
                 key, "prefill_step",
                 lambda: jax.jit(prefill_step, in_shardings=(p_sh, b_sh)))
-            lowered = f.lower(p_sds, b_sds)
+            with self.obs.span("lower", step="prefill_step",
+                               arch=cfg.name, shape=shape.name):
+                lowered = f.lower(p_sds, b_sds)
             meta = {"step": "prefill_step", "path": "serve"}
 
         else:  # decode / long_decode: serve_step with a seq_len KV cache
@@ -367,7 +420,9 @@ class Session:
                 key, "serve_step",
                 lambda: jax.jit(serve_step, in_shardings=(p_sh, c_sh, b_sh),
                                 donate_argnums=(1,)))
-            lowered = f.lower(p_sds, c_sds, b_sds)
+            with self.obs.span("lower", step="serve_step",
+                               arch=cfg.name, shape=shape.name):
+                lowered = f.lower(p_sds, c_sds, b_sds)
             meta = {"step": "serve_step", "path": "serve"}
 
         meta.update(arch=cfg.name, shape=shape.name, plan={
@@ -418,7 +473,7 @@ class Session:
         return Engine(model, params, batch_slots, max_seq,
                       temperature=temperature, seed=seed,
                       opcache=self.opcache, registry=self.state,
-                      cache_key=f"{name}/kv_cache")
+                      cache_key=f"{name}/kv_cache", obs=self.obs)
 
     # ------------------------------------------------------------------
     # the linalg surface

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro import obs as obs_mod
+
 from . import bucketer, compressed, schedules, topology as topo_mod
 
 
@@ -78,6 +80,21 @@ def sync_tree(grads, plan: CommsPlan, mesh: Mesh,
         mesh, sum(4 * leaf.size for leaf in jax.tree.leaves(grads)))
     bplan = bucketer.plan_buckets(grads, plan.bucket_bytes)
     buckets = bucketer.flatten_buckets(bplan, grads)
+
+    # Telemetry (trace time, once per compile — these counters therefore
+    # record PER-STEP wire traffic of the compiled program, exactly the
+    # measured side the drift report joins against estimate_seconds).
+    obs = obs_mod.get_active()
+    if obs.enabled:
+        ratio = compressed.WIRE_RATIO.get(plan.wire_dtype, 1.0)
+        payload = int(sum(4 * b.size for b in buckets) * ratio)
+        obs.counter(f"comms.{sched}.buckets").inc(len(buckets))
+        obs.counter(f"comms.{sched}.wire_bytes").inc(payload)
+        obs.counter("comms.wire_bytes").inc(payload)
+        obs.event("comms_sync", schedule=sched,
+                  wire_dtype=plan.wire_dtype or "fp32",
+                  buckets=len(buckets), wire_bytes=payload,
+                  axes=list(axes))
     reduced = [
         compressed.wire_all_reduce(b, axes, sched, plan.wire_dtype,
                                    plan.intra_axis)

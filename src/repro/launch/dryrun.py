@@ -6,12 +6,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import argparse          # noqa: E402
 import json              # noqa: E402
 import re                # noqa: E402
-import time              # noqa: E402
 from typing import Any, Dict, Optional  # noqa: E402
 
 import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro import obs as obs_mod  # noqa: E402
 from repro.api import Session  # noqa: E402
 from repro.configs import cells  # noqa: E402
 from repro.core import memory as mem_mod  # noqa: E402
@@ -161,21 +161,26 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              microbatches: Optional[int] = None, model_kwargs=None,
              plan_kwargs=None, hlo_out: Optional[str] = None,
              pp: int = 1, hbm_gib: Optional[float] = None,
-             comms: str = "off") -> Dict[str, Any]:
+             comms: str = "off",
+             obs: Optional["obs_mod.Obs"] = None) -> Dict[str, Any]:
+    # An always-on Obs (in-memory unless the caller wired a JSONL sink):
+    # the lower/compile wall times in the artifact come from its spans —
+    # monotonic perf_counter via the span API, not wall-clock time.time().
+    obs = obs if obs is not None else obs_mod.Obs(name="dryrun")
     mesh = make_production_mesh(multi_pod=multi_pod, pp=pp)
-    session = Session(mesh=mesh, hbm_gib=hbm_gib)
+    session = Session(mesh=mesh, hbm_gib=hbm_gib, obs=obs)
     n_chips = 512 if multi_pod else 256
     with jax.set_mesh(mesh):
-        t0 = time.time()
-        lowered, meta, plan = build_lowered(
-            arch, shape_name, mesh, microbatches=microbatches,
-            model_kwargs=model_kwargs, plan_kwargs=plan_kwargs,
-            comms=comms, session=session)
-        t_lower = time.time() - t0
+        with obs.span("dryrun_lower", arch=arch, shape=shape_name) as sp_l:
+            lowered, meta, plan = build_lowered(
+                arch, shape_name, mesh, microbatches=microbatches,
+                model_kwargs=model_kwargs, plan_kwargs=plan_kwargs,
+                comms=comms, session=session)
+        t_lower = sp_l.seconds
 
-        t0 = time.time()
-        compiled = lowered.compile()
-        t_compile = time.time() - t0
+        with obs.span("compile", arch=arch, shape=shape_name) as sp_c:
+            compiled = lowered.compile()
+        t_compile = sp_c.seconds
 
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
@@ -262,8 +267,12 @@ def main():
                          "comparable with the GSPMD-path history)")
     ap.add_argument("--out", type=str, default="experiments/dryrun")
     ap.add_argument("--hlo-out", type=str, default=None)
+    ap.add_argument("--metrics", type=str, default=None, metavar="PATH",
+                    help="also stream plan/lower/compile spans as JSONL "
+                         "to PATH (timings land in the artifacts either way)")
     args = ap.parse_args()
 
+    obs = obs_mod.Obs(jsonl=args.metrics, name="dryrun")
     os.makedirs(args.out, exist_ok=True)
     todo = []
     if args.all:
@@ -285,7 +294,8 @@ def main():
                 res = run_cell(arch, shape, multi_pod=mp,
                                microbatches=args.microbatches,
                                hlo_out=hlo_out, pp=args.pp,
-                               hbm_gib=args.hbm_gib, comms=args.comms)
+                               hbm_gib=args.hbm_gib, comms=args.comms,
+                               obs=obs)
                 path = os.path.join(args.out, tag + ".json")
                 with open(path, "w") as f:
                     json.dump(res, f, indent=1)
@@ -302,6 +312,7 @@ def main():
             except Exception as e:  # noqa: BLE001 — report and continue
                 failures.append((tag, str(e)[:200]))
                 print(f"FAIL {tag}: {str(e)[:200]}")
+    obs.close()
     if failures:
         raise SystemExit(f"{len(failures)} dry-run failures: "
                          + "; ".join(t for t, _ in failures))

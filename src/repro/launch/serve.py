@@ -10,19 +10,41 @@ counterpart of launch/train.py.
 from __future__ import annotations
 
 import argparse
+import os
 import time
+from typing import Optional
 
 import jax
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.api import Session
 from repro.serve import Request
 
 
 def run(arch: str, *, n_requests: int = 8, batch_slots: int = 4,
         max_seq: int = 128, prompt_len: int = 16, new_tokens: int = 16,
-        scale_down: int = 64, seed: int = 0, mesh=None):
-    session = Session(mesh=mesh)
+        scale_down: int = 64, seed: int = 0, mesh=None,
+        metrics: Optional[str] = None):
+    # --metrics: stream plan/lower spans + per-request prefill/decode
+    # latency histograms as JSONL; off -> NULL obs, output unchanged.
+    obs = obs_mod.Obs(jsonl=metrics, name=f"serve/{arch}") if metrics \
+        else obs_mod.NULL
+    prev_obs = obs_mod.set_active(obs)
+    try:
+        return _run(arch, obs, n_requests=n_requests,
+                    batch_slots=batch_slots, max_seq=max_seq,
+                    prompt_len=prompt_len, new_tokens=new_tokens,
+                    scale_down=scale_down, seed=seed, mesh=mesh,
+                    metrics=metrics)
+    finally:
+        obs_mod.set_active(prev_obs)
+        obs.close()
+
+
+def _run(arch: str, obs, *, n_requests, batch_slots, max_seq, prompt_len,
+         new_tokens, scale_down, seed, mesh, metrics):
+    session = Session(mesh=mesh, obs=obs)
     plan = session.plan(
         arch, batch=batch_slots, seq=max_seq, kind="decode",
         scale_down=scale_down,
@@ -49,6 +71,18 @@ def run(arch: str, *, n_requests: int = 8, batch_slots: int = 4,
         dt = time.perf_counter() - t0
     print(f"{arch}: {n_requests} requests, {total} tokens in {dt:.2f}s "
           f"({total / dt:.1f} tok/s, {ticks} ticks)")
+    if obs.enabled:
+        session.publish_metrics()
+        for name in ("serve.prefill_s", "serve.decode_s"):
+            s = obs.histogram(name).summary()
+            if s.get("count"):
+                print(f"{name}: n={s['count']} p50={s['p50'] * 1e3:.1f}ms "
+                      f"p99={s['p99'] * 1e3:.1f}ms")
+        snap = os.path.join(os.path.dirname(os.path.abspath(metrics)) or ".",
+                            "BENCH_serve_metrics.json")
+        obs.snapshot(snap, arch=arch, requests=n_requests,
+                     tokens=total, tok_per_s=total / dt)
+        print(f"metrics: {metrics}  snapshot: {snap}")
     return total, dt
 
 
@@ -60,10 +94,13 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--scale-down", type=int, default=64)
+    ap.add_argument("--metrics", type=str, default=None, metavar="PATH",
+                    help="write a JSONL telemetry stream (spans, prefill/"
+                         "decode latency histograms) to PATH; default off")
     args = ap.parse_args()
     run(args.arch, n_requests=args.requests, batch_slots=args.batch_slots,
         max_seq=args.max_seq, new_tokens=args.new_tokens,
-        scale_down=args.scale_down)
+        scale_down=args.scale_down, metrics=args.metrics)
 
 
 if __name__ == "__main__":

@@ -12,18 +12,22 @@ proves those shardings).
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import os
 import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs as obs_mod
 from repro.api import PlanMemoryError, Session
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import scale_config  # noqa: F401  (legacy import site)
 from repro.core import memory as mem_mod
 from repro.data import Pipeline, Stage, SyntheticLM
 from repro.launch import mesh as mesh_mod
+from repro.obs import report as report_mod
 from repro.train import AdamWConfig, StepTimeWatchdog, warmup_cosine
 
 
@@ -48,14 +52,92 @@ def validate_plan_memory(cfg, mesh, *, batch: int, seq: int,
           f"GiB/device vs {budget.describe()} -> fits")
 
 
+def _measure_peak(session, plan, obs) -> None:
+    """AOT-compile the plan's step (under a ``compile`` span) and publish
+    the executable's per-device peak next to the memory model's."""
+    lowered, _meta = session.dryrun(plan)
+    with obs.span("compile", step="train_step", arch=plan.cfg.name):
+        compiled = lowered.compile()
+    obs.gauge(report_mod.MEASURED_PEAK_GAUGE).set(
+        mem_mod.compiled_peak_bytes(compiled))
+    obs.gauge(report_mod.PREDICTED_PEAK_GAUGE).set(
+        float(mem_mod.peak_stage_footprint(plan.footprints).total))
+
+
+def _measure_bubble(session, plan, batch, obs) -> None:
+    """Microbatch-slope bubble probe (the pipeline_parallel benchmark's
+    estimator): time non-donating steps at two microbatch counts with the
+    MICROBATCH SIZE held fixed (the probe batch is sliced down to
+    B*m/M rows, otherwise shrinking M grows the microbatches and the
+    per-microbatch time t_mb is no longer a constant slope); the
+    bubble-free t_mb is then the slope between the two counts and
+    measured bubble at the plan's M is 1 - M*t_mb/t(M).  Publishes the
+    measured/predicted pair the drift report joins on."""
+    from repro.api.session import dispatch_train_step
+
+    spec = plan.pipeline
+    m_hi = spec.num_microbatches
+    m_lo = m_hi // 2
+    gb = plan.global_batch
+    if m_hi < 2 or (gb * m_lo) % m_hi:
+        return   # one microbatch: slope needs two distinct counts
+    state = session.get("train_state")
+    times = {}
+    for m in (m_lo, m_hi):
+        fn = jax.jit(dispatch_train_step(
+            plan.model, session.mesh, adamw=plan.adamw,
+            num_microbatches=m, comms=plan.comms,
+            pipeline=dataclasses.replace(spec, num_microbatches=m),
+            path=plan.path))
+        b_m = jax.tree.map(lambda x: x[: gb * m // m_hi], batch)
+        jax.block_until_ready(fn(state, b_m))   # compile
+        jax.block_until_ready(fn(state, b_m))   # warm
+        best = float("inf")
+        for _ in range(5):                      # best-of-5: the slope is
+            t0 = time.perf_counter()            # a difference of two Ms,
+            jax.block_until_ready(fn(state, b_m))   # noise kills it
+            best = min(best, time.perf_counter() - t0)
+        times[m] = best
+    meas = report_mod.measured_bubble_fraction(times)[m_hi]
+    obs.gauge(report_mod.MEASURED_BUBBLE_GAUGE).set(meas)
+    obs.gauge(report_mod.PREDICTED_BUBBLE_GAUGE).set(spec.bubble_fraction())
+    obs.event("bubble_probe", microbatches=sorted(times),
+              times_s=[times[m] for m in sorted(times)], measured=meas,
+              predicted=spec.bubble_fraction())
+
+
 def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
         scale_down: int = 64, lr: float = 3e-3, microbatches: int = 1,
         ckpt_dir: Optional[str] = None, ckpt_every: int = 25,
         resume: bool = False, mesh=None, log_every: int = 10,
         seed: int = 0, comms: str = "auto", pp: int = 1,
-        pp_schedule: str = "gpipe", hbm_gib: Optional[float] = None):
+        pp_schedule: str = "gpipe", hbm_gib: Optional[float] = None,
+        metrics: Optional[str] = None,
+        metrics_snapshot: Optional[str] = None):
+    # Telemetry is strictly opt-in: without --metrics every obs call site
+    # sees the NULL singleton, so numerics and stdout are bit-identical
+    # to the uninstrumented driver.
+    obs = obs_mod.Obs(jsonl=metrics, name=f"train/{arch}") if metrics \
+        else obs_mod.NULL
+    prev_obs = obs_mod.set_active(obs)
+    try:
+        return _run(arch, obs, steps=steps, batch=batch, seq=seq,
+                    scale_down=scale_down, lr=lr, microbatches=microbatches,
+                    ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, resume=resume,
+                    mesh=mesh, log_every=log_every, seed=seed, comms=comms,
+                    pp=pp, pp_schedule=pp_schedule, hbm_gib=hbm_gib,
+                    metrics=metrics, metrics_snapshot=metrics_snapshot)
+    finally:
+        obs_mod.set_active(prev_obs)
+        obs.close()
+
+
+def _run(arch: str, obs, *, steps, batch, seq, scale_down, lr, microbatches,
+         ckpt_dir, ckpt_every, resume, mesh, log_every, seed, comms, pp,
+         pp_schedule, hbm_gib, metrics, metrics_snapshot):
     session = Session(mesh=mesh if mesh is not None
-                      else mesh_mod.make_host_mesh(pp), hbm_gib=hbm_gib)
+                      else mesh_mod.make_host_mesh(pp), hbm_gib=hbm_gib,
+                      obs=obs)
     adamw = AdamWConfig(lr=warmup_cosine(lr, steps // 10 + 1, steps))
     plan = session.plan(
         arch, batch=batch, seq=seq, microbatches=microbatches,
@@ -104,15 +186,26 @@ def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
             stages = []
         pipe = Pipeline(source, stages, n_threads=2).start()
 
-        dog = StepTimeWatchdog()
+        def on_anomaly(step, dt, msg):
+            # anomaly -> action (watchdog contract): record the event and
+            # cut the early checkpoint the restart story depends on, not
+            # just a log line.  Fires with or without --metrics.
+            obs.event("watchdog_anomaly", step=step, dt_s=dt, msg=msg)
+            if mgr is not None:
+                mgr.save(step + 1, session.get("train_state"))
+                obs.event("watchdog_checkpoint", step=step + 1)
+                print(f"WATCHDOG: early checkpoint at step {step + 1}")
+
+        dog = StepTimeWatchdog(on_anomaly=on_anomaly)
         losses = []
+        last_batch = None
         try:
             for i in range(start_step, steps):
                 batch_np = next(pipe)
                 t0 = time.perf_counter()
-                metrics = session.step(plan, jax.tree.map(jnp.asarray,
-                                                          batch_np))
-                loss = float(jax.device_get(metrics["loss"]))
+                last_batch = jax.tree.map(jnp.asarray, batch_np)
+                metrics_out = session.step(plan, last_batch)
+                loss = float(jax.device_get(metrics_out["loss"]))
                 dt = time.perf_counter() - t0
                 losses.append(loss)
                 msg = dog.observe(i, dt)
@@ -127,6 +220,23 @@ def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
                 mgr.save(steps, session.get("train_state"), blocking=True)
         finally:
             pipe.stop()
+
+        if obs.enabled:
+            session.publish_metrics()
+            _measure_peak(session, plan, obs)
+            if plan.pipeline is not None and last_batch is not None:
+                _measure_bubble(session, plan, last_batch, obs)
+            drift = report_mod.session_drift_report(
+                plan, {"metrics": session.obs.metrics.summary()})
+            print("drift report (predicted vs measured):")
+            print(drift.table())
+            snap_path = metrics_snapshot or os.path.join(
+                os.path.dirname(os.path.abspath(metrics)) or ".",
+                "BENCH_step_metrics.json")
+            obs.snapshot(snap_path, arch=arch, steps=steps,
+                         mesh=dict(session.mesh.shape),
+                         drift=drift.to_dict())
+            print(f"metrics: {metrics}  snapshot: {snap_path}")
     return losses
 
 
@@ -151,6 +261,14 @@ def main():
     ap.add_argument("--hbm-gib", type=float, default=None,
                     help="per-device HBM budget in GiB for the fail-fast "
                          "memory check (default: platform table)")
+    ap.add_argument("--metrics", type=str, default=None, metavar="PATH",
+                    help="write a JSONL telemetry stream (spans, counters, "
+                         "events) to PATH and a BENCH_step_metrics.json "
+                         "snapshot + drift report at exit; default off — "
+                         "numerics and output are unchanged without it")
+    ap.add_argument("--metrics-snapshot", type=str, default=None,
+                    metavar="PATH", help="override the snapshot path "
+                    "(default: BENCH_step_metrics.json next to --metrics)")
     args = ap.parse_args()
     try:
         losses = run(args.arch, steps=args.steps, batch=args.batch,
@@ -158,7 +276,8 @@ def main():
                      microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
                      resume=args.resume, seed=args.seed, comms=args.comms,
                      pp=args.pp, pp_schedule=args.pp_schedule,
-                     hbm_gib=args.hbm_gib)
+                     hbm_gib=args.hbm_gib, metrics=args.metrics,
+                     metrics_snapshot=args.metrics_snapshot)
     except PlanMemoryError as e:     # plan validation: clean exit, no trace
         raise SystemExit(str(e))
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")

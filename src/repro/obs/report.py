@@ -1,0 +1,223 @@
+"""Predicted-vs-measured drift report.
+
+The planner predicts (alpha-beta step seconds, the GPipe/1F1B bubble
+fraction, per-stage peak memory); the obs layer measures (step-span
+histograms, the microbatch-slope bubble probe, the compiled executable's
+``memory_analysis`` peak).  This module joins the two sides and flags any
+row whose relative drift exceeds its tolerance — the gate the ROADMAP's
+calibration loop will consume (PolyDL's generate/measure/let-data-pick
+pattern needs exactly this table).
+
+On this CPU simulator the *step-time* row drifts by construction — every
+alpha/beta/FLOPs constant in the cost model is a nominal accelerator
+value — and the report says so rather than hiding it: a flagged row is
+data for the future fitter, not an error.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Mapping, Optional
+
+#: Per-metric relative drift tolerance: |measured - predicted| / predicted.
+#: Bubble fraction and peak memory are structural predictions and should
+#: track within ~35%; step time is priced with nominal hardware constants
+#: (uncalibrated until the ROADMAP fitter lands), so its tolerance only
+#: catches order-of-magnitude regressions of an already-calibrated table.
+DEFAULT_TOLERANCES: Dict[str, float] = {
+    "step_time_s": 10.0,
+    "bubble_fraction": 0.35,
+    "peak_bytes": 0.35,
+}
+
+UNITS: Dict[str, str] = {
+    "step_time_s": "s",
+    "bubble_fraction": "frac",
+    "peak_bytes": "B",
+}
+
+#: Gauge / histogram names the measured side is read from (the contract
+#: between the instrumentation sites and this report).
+MEASURED_STEP_HISTOGRAM = "span.step.s"
+MEASURED_BUBBLE_GAUGE = "pipeline.bubble.measured"
+PREDICTED_BUBBLE_GAUGE = "pipeline.bubble.predicted"
+MEASURED_PEAK_GAUGE = "memory.measured_peak_bytes"
+PREDICTED_PEAK_GAUGE = "memory.predicted_peak_bytes"
+
+
+@dataclasses.dataclass
+class DriftRow:
+    """One predicted-vs-measured pair with a relative tolerance."""
+
+    name: str
+    predicted: float
+    measured: float
+    unit: str = ""
+    tolerance: float = 0.5
+
+    @property
+    def drift(self) -> float:
+        """Relative drift (measured - predicted) / |predicted|."""
+        denom = max(abs(self.predicted), 1e-12)
+        return (self.measured - self.predicted) / denom
+
+    @property
+    def flagged(self) -> bool:
+        return abs(self.drift) > self.tolerance
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"name": self.name, "predicted": self.predicted,
+                "measured": self.measured, "unit": self.unit,
+                "drift": self.drift, "tolerance": self.tolerance,
+                "flagged": self.flagged}
+
+
+@dataclasses.dataclass
+class DriftReport:
+    rows: List[DriftRow]
+
+    @property
+    def flagged(self) -> List[DriftRow]:
+        return [r for r in self.rows if r.flagged]
+
+    def table(self) -> str:
+        """Fixed-width predicted-vs-measured table."""
+        header = (f"{'metric':<18s} {'predicted':>14s} {'measured':>14s} "
+                  f"{'drift':>9s} {'tol':>7s}  verdict")
+        lines = [header, "-" * len(header)]
+        for r in self.rows:
+            lines.append(
+                f"{r.name:<18s} {_fmt(r.predicted, r.unit):>14s} "
+                f"{_fmt(r.measured, r.unit):>14s} {r.drift:>+8.1%} "
+                f"{r.tolerance:>6.0%}  "
+                f"{'DRIFT' if r.flagged else 'ok'}")
+        if not self.rows:
+            lines.append("(no joined predicted/measured pairs)")
+        return "\n".join(lines)
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"rows": [r.as_dict() for r in self.rows],
+                "n_flagged": len(self.flagged)}
+
+
+def _fmt(v: float, unit: str) -> str:
+    if unit == "B":
+        return f"{v / 2**30:.3f} GiB"
+    if unit == "frac":
+        return f"{v:.3f}"
+    if unit == "s" and v < 0.1:
+        return f"{v * 1e3:.2f} ms"
+    return f"{v:.4g} {unit}".strip()
+
+
+def drift_report(predicted: Mapping[str, float],
+                 measured: Mapping[str, float],
+                 tolerances: Optional[Mapping[str, float]] = None
+                 ) -> DriftReport:
+    """Join the two sides on shared keys; unmatched keys are dropped
+    (a prediction with no measurement is not drift, it is a gap)."""
+    tol = dict(DEFAULT_TOLERANCES)
+    tol.update(tolerances or {})
+    rows = [DriftRow(name=k, predicted=float(predicted[k]),
+                     measured=float(measured[k]),
+                     unit=UNITS.get(k, ""), tolerance=tol.get(k, 0.5))
+            for k in sorted(set(predicted) & set(measured))]
+    return DriftReport(rows=rows)
+
+
+# ---------------------------------------------------------------------------
+# the plan side (predictions)
+# ---------------------------------------------------------------------------
+
+def predicted_step_seconds(plan) -> Optional[float]:
+    """Alpha-beta cost-model seconds for the plan's own (dp, tp, pp, M).
+
+    Reuses the planner's hybrid scoring formula
+    (:func:`repro.core.planner.score_hybrid_candidates`) so the report and
+    the planner can never disagree about the predicted side; returns None
+    when the plan's factorization is outside the scored set (e.g. a
+    non-train cell).
+    """
+    from repro.core.planner import score_hybrid_candidates
+
+    mesh = plan.mesh
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= mesh.shape.get(a, 1)
+    tp = mesh.shape.get("model", 1)
+    pp = mesh.shape.get("pipe", 1)
+    n_dev = math.prod(mesh.shape.values()) or 1
+    try:
+        scores = score_hybrid_candidates(
+            plan.cfg, n_dev, global_batch=plan.global_batch,
+            seq_len=plan.seq_len, num_microbatches=plan.num_microbatches,
+            schedule=plan.schedule, check_memory=False)
+    except Exception:
+        return None
+    return scores.get((dp, tp, pp))
+
+
+def plan_predictions(plan) -> Dict[str, float]:
+    """The predicted side of the report, read off an ExecutablePlan."""
+    out: Dict[str, float] = {}
+    t = predicted_step_seconds(plan)
+    if t is not None:
+        out["step_time_s"] = t
+    if plan.pipeline is not None:
+        out["bubble_fraction"] = plan.pipeline.bubble_fraction()
+    if plan.footprints:
+        from repro.core import memory as mem_mod
+        out["peak_bytes"] = float(
+            mem_mod.peak_stage_footprint(plan.footprints).total)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the measured side
+# ---------------------------------------------------------------------------
+
+def measured_bubble_fraction(step_seconds: Mapping[int, float]
+                             ) -> Dict[int, float]:
+    """Measured bubble per microbatch count from timed steps at >= 2 Ms.
+
+    The bubble-free per-microbatch time t_mb is the slope between the two
+    largest M (the S-1 bubble term cancels in the difference); measured
+    bubble at M is then 1 - M * t_mb / t(M) — the estimator the
+    pipeline_parallel benchmark established.
+    """
+    if len(step_seconds) < 2:
+        raise ValueError("need step times at >= 2 microbatch counts to "
+                         "separate the bubble from the per-microbatch slope")
+    ms = sorted(step_seconds)
+    m_hi, m_lo = ms[-1], ms[-2]
+    t_mb = max(1e-12, (step_seconds[m_hi] - step_seconds[m_lo])
+               / (m_hi - m_lo))
+    return {m: 1.0 - m * t_mb / max(step_seconds[m], 1e-12) for m in ms}
+
+
+def measured_from_summary(summary: Mapping) -> Dict[str, float]:
+    """The measured side, read from a ``MetricRegistry.summary()`` (or a
+    snapshot document wrapping one under ``"metrics"``)."""
+    m = summary.get("metrics", summary)
+    hists = m.get("histograms", {})
+    gauges = m.get("gauges", {})
+    out: Dict[str, float] = {}
+    h = hists.get(MEASURED_STEP_HISTOGRAM)
+    if h and h.get("count"):
+        out["step_time_s"] = h["p50"]
+    if MEASURED_BUBBLE_GAUGE in gauges:
+        out["bubble_fraction"] = gauges[MEASURED_BUBBLE_GAUGE]
+    if MEASURED_PEAK_GAUGE in gauges:
+        out["peak_bytes"] = gauges[MEASURED_PEAK_GAUGE]
+    return out
+
+
+def session_drift_report(plan, summary: Mapping,
+                         tolerances: Optional[Mapping[str, float]] = None
+                         ) -> DriftReport:
+    """The standard join: an ExecutablePlan's predictions vs a metric
+    summary's measurements (step time, bubble fraction, peak memory)."""
+    return drift_report(plan_predictions(plan),
+                        measured_from_summary(summary),
+                        tolerances=tolerances)

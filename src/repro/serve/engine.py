@@ -13,11 +13,14 @@ rows re-prefilled (slot-wise dynamic_update on the batch dim).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs as obs_mod
 
 
 @dataclasses.dataclass
@@ -61,7 +64,12 @@ def _make_prefill_fn(model):
 class Engine:
     def __init__(self, model, params, batch_slots: int, max_seq: int,
                  temperature: float = 0.0, seed: int = 0,
-                 opcache=None, registry=None, cache_key: str = None):
+                 opcache=None, registry=None, cache_key: str = None,
+                 obs=None):
+        # prefill/decode latency histograms + token counters; the NULL
+        # default keeps the tick loop free of timing syscalls and
+        # block_until_ready sync points when telemetry is off.
+        self.obs = obs if obs is not None else obs_mod.NULL
         self.model = model
         self.params = params
         self.B = batch_slots
@@ -114,9 +122,15 @@ class Engine:
             if self.active[b] is None and self.queue:
                 req = self.queue.pop(0)
                 toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                t0 = time.perf_counter() if self.obs.enabled else 0.0
                 last_logits, self.cache = self._prefill_one(
                     self.params, self.cache, toks,
                     jnp.asarray(b, jnp.int32))
+                if self.obs.enabled:
+                    jax.block_until_ready(last_logits)
+                    self.obs.histogram("serve.prefill_s").observe(
+                        time.perf_counter() - t0)
+                    self.obs.counter("serve.prefills").inc()
                 nxt = self._sample(last_logits)[0]
                 req.out.append(int(nxt))
                 self.active[b] = req
@@ -144,9 +158,14 @@ class Engine:
         # per-slot masking handles ragged prompts (pos is max over slots)
         pos = int(max(self.pos[b] for b, r in enumerate(self.active)
                       if r is not None))
+        t0 = time.perf_counter() if self.obs.enabled else 0.0
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(pos, jnp.int32))
+        if self.obs.enabled:
+            jax.block_until_ready(logits)
+            self.obs.histogram("serve.decode_s").observe(
+                time.perf_counter() - t0)
         self._publish_cache()
         nxt = self._sample(logits[:, 0, :])
         n_active = 0
@@ -159,6 +178,7 @@ class Engine:
             if len(r.out) >= r.max_new_tokens or self.pos[b] >= self.T - 1:
                 r.done = True
                 self.active[b] = None
+        self.obs.counter("serve.decode_tokens").inc(n_active)
         return n_active
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:

@@ -4,14 +4,17 @@ On a real fleet slow steps correlate with failing hosts/links; the watchdog
 keeps an EMA + variance of step time and flags z-score outliers.  The train
 loop consults it to (a) log the anomaly, (b) trigger an early checkpoint —
 the cheap insurance dMath's checkpoint-restart requirement (§2 req. e)
-asks for.
+asks for.  Action is delivered through ``on_anomaly``: the launch driver
+installs a hook that records the anomaly as an obs event and fires the
+early checkpoint, so a flagged step leaves both a trace record and a
+restart point instead of only a log line.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 
 @dataclasses.dataclass
@@ -23,6 +26,8 @@ class StepTimeWatchdog:
     var: float = 0.0
     n: int = 0
     anomalies: List[int] = dataclasses.field(default_factory=list)
+    #: called as on_anomaly(step, dt, msg) for every flagged step
+    on_anomaly: Optional[Callable[[int, float, str], None]] = None
 
     def observe(self, step: int, dt: float) -> Optional[str]:
         self.n += 1
@@ -39,7 +44,10 @@ class StepTimeWatchdog:
             + self.alpha * (dt - self.mean) ** 2
         if z > self.z_threshold:
             self.anomalies.append(step)
-            return (f"straggler suspected at step {step}: "
-                    f"{dt * 1e3:.1f} ms vs EMA {self.mean * 1e3:.1f} ms "
-                    f"(z={z:.1f})")
+            msg = (f"straggler suspected at step {step}: "
+                   f"{dt * 1e3:.1f} ms vs EMA {self.mean * 1e3:.1f} ms "
+                   f"(z={z:.1f})")
+            if self.on_anomaly is not None:
+                self.on_anomaly(step, dt, msg)
+            return msg
         return None
