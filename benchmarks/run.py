@@ -12,6 +12,9 @@
                 memory_analysis(); 1F1B ring vs all-M stash (8 fake devices)
   step_metrics  repro.obs: instrumented train run -> JSONL stream +
                 BENCH_step_metrics.json drift snapshot (8 fake devices)
+  calibrate     repro.core.calibrate: measure -> fit -> re-plan ->
+                re-measure; asserts drift shrinks to n_flagged == 0 and
+                commits experiments/calibration.json (8 fake devices)
   kernels       Pallas kernels (interpret) vs oracles
   roofline      §Roofline summary from the dry-run artifacts (if present)
 
@@ -31,6 +34,7 @@ MULTIDEV = {"gemm": "benchmarks.gemm_layouts",
             "pipeline_parallel": "benchmarks.pipeline_parallel_bench",
             "memory_model": "benchmarks.memory_model_bench",
             "step_metrics": "benchmarks.step_metrics_bench",
+            "calibrate": "benchmarks.calibrate_bench",
             "table1": "benchmarks.table1"}
 LOCAL = {"precision": "benchmarks.precision_bench",
          "pipeline": "benchmarks.pipeline_bench",

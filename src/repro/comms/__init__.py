@@ -22,11 +22,11 @@ from .plan import CommsPlan, sync_tree
 from .schedules import (all_reduce, hierarchical_all_reduce, ring_all_reduce,
                         reduce_scatter_all_gather, tree_all_reduce)
 from .topology import (FDR_IB, PCIE_GEN3, SCHEDULES, LinkSpec, Topology,
-                       topology_from_mesh)
+                       allreduce_design, default_links, topology_from_mesh)
 
 __all__ = [
     "Topology", "LinkSpec", "topology_from_mesh", "SCHEDULES",
-    "PCIE_GEN3", "FDR_IB",
+    "PCIE_GEN3", "FDR_IB", "allreduce_design", "default_links",
     "ring_all_reduce", "reduce_scatter_all_gather", "tree_all_reduce",
     "hierarchical_all_reduce", "all_reduce",
     "BucketPlan", "plan_buckets", "flatten_buckets", "unflatten_buckets",

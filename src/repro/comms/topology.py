@@ -89,15 +89,9 @@ class Topology:
         if n <= 1:
             return 0.0
         link = self.inter if self.inter_size > 1 else self.intra
-        if schedule in ("psum", "ring", "rsag"):
-            # bandwidth-optimal: 2(n-1)/n of the buffer crosses the wire
-            wire = 2.0 * nbytes * (n - 1) / n
-            return self._flat_allreduce(nbytes, n, link, 2 * (n - 1), wire)
-        if schedule == "tree":
-            # recursive doubling: log2(n) full-buffer exchanges
-            steps = max(1, math.ceil(math.log2(n)))
-            return self._flat_allreduce(nbytes, n, link, steps,
-                                        nbytes * steps)
+        if schedule in ("psum", "ring", "rsag", "tree"):
+            steps, wire = allreduce_design(nbytes, schedule, n)
+            return self._flat_allreduce(nbytes, n, link, steps, wire)
         if schedule == "hier":
             # clamp the two levels to the group actually reducing (n may
             # name a sub-mesh group smaller than the full topology)
@@ -141,15 +135,50 @@ class Topology:
         return min(scores, key=scores.get)
 
 
+def allreduce_design(nbytes: int, schedule: str, n: int
+                     ) -> Tuple[int, float]:
+    """(steps, wire_bytes) of one *flat* all-reduce — the structural half
+    of the alpha-beta model, separated out so the calibration fitter
+    (:mod:`repro.core.calibrate`) can regress measured durations against
+    the exact design matrix :meth:`Topology.allreduce_time` prices with.
+
+    ``hier`` is two-level and has no single (steps, wire) row; decompose
+    it into its flat phases before designing.
+    """
+    if n <= 1:
+        return 0, 0.0
+    if schedule in ("psum", "ring", "rsag"):
+        # bandwidth-optimal: 2(n-1)/n of the buffer crosses the wire
+        return 2 * (n - 1), 2.0 * nbytes * (n - 1) / n
+    if schedule == "tree":
+        # recursive doubling: log2(n) full-buffer exchanges
+        steps = max(1, math.ceil(math.log2(n)))
+        return steps, float(nbytes) * steps
+    raise ValueError(f"no flat design for schedule {schedule!r}; "
+                     f"expected one of ('psum', 'ring', 'rsag', 'tree')")
+
+
+def default_links() -> Tuple[LinkSpec, LinkSpec]:
+    """(intra, inter) links every cost-model consumer starts from: the
+    active calibration table's fitted links when one is installed
+    (:func:`repro.core.calibrate.set_active`), else the hand-set
+    :data:`PCIE_GEN3` / :data:`FDR_IB` nominals."""
+    from repro.core import calibrate
+    intra, inter = calibrate.links()
+    return intra or PCIE_GEN3, inter or FDR_IB
+
+
 def topology_from_mesh(mesh: Mesh,
                        intra_axes: Optional[Sequence[str]] = None,
-                       intra: LinkSpec = PCIE_GEN3,
-                       inter: LinkSpec = FDR_IB) -> Topology:
+                       intra: Optional[LinkSpec] = None,
+                       inter: Optional[LinkSpec] = None) -> Topology:
     """Derive the two-level topology from a named mesh.
 
     Default split follows repo convention: ``"model"`` (tensor parallel) is
     the intranode axis, every other axis (``"data"``, ``"pod"``) spans
-    nodes.  Axes absent from the mesh are ignored.
+    nodes.  Axes absent from the mesh are ignored.  Link parameters left
+    as ``None`` resolve through :func:`default_links` (calibrated when a
+    table is active, hand-set nominals otherwise).
     """
     names = tuple(mesh.shape.keys())
     if intra_axes is None:
@@ -157,5 +186,9 @@ def topology_from_mesh(mesh: Mesh,
     else:
         intra_axes = tuple(a for a in intra_axes if a in names)
     inter_axes = tuple(a for a in names if a not in intra_axes)
+    if intra is None or inter is None:
+        d_intra, d_inter = default_links()
+        intra = intra or d_intra
+        inter = inter or d_inter
     return Topology(intra_axes=intra_axes, inter_axes=inter_axes,
                     axis_sizes=dict(mesh.shape), intra=intra, inter=inter)

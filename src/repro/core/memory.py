@@ -144,14 +144,25 @@ class Footprint:
     def total(self) -> int:
         return sum(getattr(self, f) for f in self._FIELDS)
 
+    @property
+    def calibrated_total(self) -> float:
+        """``total`` scaled by the active calibration table's
+        measured/predicted peak ratio (:mod:`repro.core.calibrate`;
+        1.0 without a table) — the model's systematic bias divided out."""
+        from repro.core import calibrate
+        return self.total * calibrate.memory_scale()
+
     def fits(self, budget: Union[MemoryBudget, int, None] = None) -> bool:
         """Does this footprint fit ``budget.usable``?
 
         The headroom lives on the budget object (single source of truth);
-        a raw byte count is wrapped with the default headroom.
+        a raw byte count is wrapped with the default headroom.  The
+        comparison uses :attr:`calibrated_total`, so an installed
+        calibration table corrects the model's measured bias before the
+        planner refuses a candidate.
         """
         budget = as_budget(budget)
-        return self.total <= budget.usable
+        return self.calibrated_total <= budget.usable
 
     def report(self) -> str:
         rows = [(k, getattr(self, k)) for k in self._FIELDS]

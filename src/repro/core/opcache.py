@@ -100,6 +100,13 @@ class OpCache:
         )
         return plan(*args, **kwargs)
 
+    def __contains__(self, key: Hashable) -> bool:
+        """Membership probe WITHOUT touching hit/miss stats — lets callers
+        predict whether a dispatch will build (e.g. the Session labels an
+        opcache-miss step as warmup before running it)."""
+        with self._lock:
+            return key in self._plans
+
     def stats(self) -> Dict[str, CacheStats]:
         with self._lock:
             return dict(self._stats)

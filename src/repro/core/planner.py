@@ -202,10 +202,12 @@ def grad_sync_topology(mesh: Mesh):
     from repro.comms import topology as topo_mod
 
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    intra, inter = topo_mod.default_links()
     return topo_mod.Topology(
         intra_axes=tuple(a for a in batch_axes if a == "data"),
         inter_axes=tuple(a for a in batch_axes if a != "data"),
-        axis_sizes={a: mesh.shape[a] for a in batch_axes})
+        axis_sizes={a: mesh.shape[a] for a in batch_axes},
+        intra=intra, inter=inter)
 
 
 def score_comms_schedules(nbytes: int, mesh: Mesh, topo=None) -> dict:
@@ -270,6 +272,8 @@ def score_hybrid_candidates(cfg, n_devices: int, *, global_batch: int,
                             seq_len: int,
                             num_microbatches: Optional[int] = None,
                             intra=None, inter=None,
+                            device_flops: Optional[float] = None,
+                            step_overhead_s: Optional[float] = None,
                             schedule: str = "gpipe",
                             hbm_budget=None, check_memory: bool = True,
                             return_refused: bool = False):
@@ -297,13 +301,26 @@ def score_hybrid_candidates(cfg, n_devices: int, *, global_batch: int,
     :class:`repro.core.memory.MemoryBudget`, raw bytes, or ``--hbm-gib``
     via :func:`repro.core.memory.budget_for`).  Pass
     ``return_refused=True`` to also get ``{(dp, tp, pp, M): reason}``.
+
+    Every constant defaults *calibrated-when-available*: link parameters,
+    the per-device FLOPs rate, and the fixed per-step overhead resolve
+    through the active :mod:`repro.core.calibrate` table (hand-set
+    nominals without one); explicit arguments always win, which is how
+    the fitter itself evaluates trial constants.
     """
     from repro.comms import topology as topo_mod
+    from repro.core import calibrate as cal_mod
     from repro.core import memory as mem_mod
     from repro.pipeline import costs as pipe_costs
 
-    intra = intra or topo_mod.PCIE_GEN3
-    inter = inter or topo_mod.FDR_IB
+    if intra is None or inter is None:
+        d_intra, d_inter = topo_mod.default_links()
+        intra = intra or d_intra
+        inter = inter or d_inter
+    flops = device_flops if device_flops is not None \
+        else pipe_costs.device_flops()
+    overhead = step_overhead_s if step_overhead_s is not None \
+        else cal_mod.step_overhead_s()
     budget = mem_mod.as_budget(hbm_budget)
     n_params = approx_param_count(cfg)
     L = max(1, getattr(cfg, "n_layers", 1) or 1)
@@ -341,7 +358,7 @@ def score_hybrid_candidates(cfg, n_devices: int, *, global_batch: int,
                     continue
 
             t_comp = (6.0 * n_params * global_batch * seq_len
-                      / n_devices / pipe_costs.DEVICE_FLOPS)
+                      / n_devices / flops)
             t_tp = 0.0
             if tp > 1:
                 ar_bytes = 2 * local_batch * seq_len * D    # bf16 stream
@@ -360,7 +377,7 @@ def score_hybrid_candidates(cfg, n_devices: int, *, global_batch: int,
                     axis_sizes={"data": dp}, intra=intra, inter=inter)
                 grad_bytes = int(4 * n_params / (tp * pp))
                 t_dp = min(topo.schedule_scores(grad_bytes).values())
-            scores[(dp, tp, pp)] = t_pipe + t_dp
+            scores[(dp, tp, pp)] = t_pipe + t_dp + overhead
     if return_refused:
         return scores, refused
     return scores

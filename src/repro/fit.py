@@ -1,0 +1,67 @@
+"""``repro.fit`` — CLI over the calibration fitter.
+
+The measure -> fit half of the self-calibrating-planner loop
+(:mod:`repro.core.calibrate` is the implementation; this module is the
+command-line face and a stable import alias)::
+
+    # fit from a run's JSONL stream (and optionally a committed snapshot)
+    python -m repro.fit experiments/step_metrics.jsonl \
+        --snapshot BENCH_step_metrics.json \
+        --out experiments/calibration.json
+
+    # re-plan + re-measure with the fitted table
+    python -m repro.launch.train --arch gemma-2b ... \
+        --calibration experiments/calibration.json
+
+``benchmarks/run.py calibrate`` drives the whole loop (measure -> fit ->
+re-plan -> re-measure) and asserts the drift shrinks.
+"""
+
+from __future__ import annotations
+
+from repro.core.calibrate import (  # noqa: F401  (public re-exports)
+    CALIBRATION_VERSION, CalibrationDataError, CalibrationTable,
+    CalibrationWarning, active, cell_from_meta, fit, fit_device_flops,
+    fit_from_files, fit_link, fit_memory_scale, fit_pipe, links, load,
+    predicted_step_seconds_for_cell, set_active)
+
+__all__ = [
+    "CALIBRATION_VERSION", "CalibrationTable", "CalibrationWarning",
+    "CalibrationDataError", "fit", "fit_from_files", "fit_link",
+    "fit_pipe", "fit_memory_scale", "fit_device_flops", "cell_from_meta",
+    "predicted_step_seconds_for_cell", "load", "set_active", "active",
+    "links", "main",
+]
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.fit",
+        description="least-squares-refit planner cost/memory constants "
+                    "from obs JSONL streams + BENCH snapshots")
+    ap.add_argument("jsonl", nargs="+",
+                    help="obs JSONL stream(s) from a --metrics run")
+    ap.add_argument("--snapshot", default=None, metavar="BENCH.json",
+                    help="snapshot to locate the cell / steady-state "
+                         "histograms (default: the stream's final metrics "
+                         "document)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the fitted table here (JSON)")
+    args = ap.parse_args(argv)
+
+    table = fit_from_files(args.jsonl, snapshot_path=args.snapshot)
+    print(table.describe())
+    prov = dict(table.provenance)
+    for k, v in sorted(prov.get("residuals", {}).items()):
+        print(f"  residual {k}: {v:.4g}")
+    for w in prov.get("warnings", []):
+        print(f"  warning [{w['field']}]: {w['reason']}")
+    if args.out:
+        print(f"wrote {table.save(args.out)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

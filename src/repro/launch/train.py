@@ -54,14 +54,18 @@ def validate_plan_memory(cfg, mesh, *, batch: int, seq: int,
 
 def _measure_peak(session, plan, obs) -> None:
     """AOT-compile the plan's step (under a ``compile`` span) and publish
-    the executable's per-device peak next to the memory model's."""
+    the executable's per-device peak next to the memory model's — both
+    the calibrated prediction (what the drift report judges) and the raw
+    uncalibrated one (what the fitter regresses the scale from)."""
     lowered, _meta = session.dryrun(plan)
     with obs.span("compile", step="train_step", arch=plan.cfg.name):
         compiled = lowered.compile()
+    peak = mem_mod.peak_stage_footprint(plan.footprints)
     obs.gauge(report_mod.MEASURED_PEAK_GAUGE).set(
         mem_mod.compiled_peak_bytes(compiled))
     obs.gauge(report_mod.PREDICTED_PEAK_GAUGE).set(
-        float(mem_mod.peak_stage_footprint(plan.footprints).total))
+        float(peak.calibrated_total))
+    obs.gauge(report_mod.PREDICTED_RAW_PEAK_GAUGE).set(float(peak.total))
 
 
 def _measure_bubble(session, plan, batch, obs) -> None:
@@ -99,11 +103,12 @@ def _measure_bubble(session, plan, batch, obs) -> None:
             best = min(best, time.perf_counter() - t0)
         times[m] = best
     meas = report_mod.measured_bubble_fraction(times)[m_hi]
+    pred = report_mod.predicted_bubble_fraction(spec)
     obs.gauge(report_mod.MEASURED_BUBBLE_GAUGE).set(meas)
-    obs.gauge(report_mod.PREDICTED_BUBBLE_GAUGE).set(spec.bubble_fraction())
+    obs.gauge(report_mod.PREDICTED_BUBBLE_GAUGE).set(pred)
     obs.event("bubble_probe", microbatches=sorted(times),
               times_s=[times[m] for m in sorted(times)], measured=meas,
-              predicted=spec.bubble_fraction())
+              predicted=pred)
 
 
 def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
@@ -113,28 +118,42 @@ def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
         seed: int = 0, comms: str = "auto", pp: int = 1,
         pp_schedule: str = "gpipe", hbm_gib: Optional[float] = None,
         metrics: Optional[str] = None,
-        metrics_snapshot: Optional[str] = None):
+        metrics_snapshot: Optional[str] = None,
+        calibration: Optional[str] = None):
     # Telemetry is strictly opt-in: without --metrics every obs call site
     # sees the NULL singleton, so numerics and stdout are bit-identical
     # to the uninstrumented driver.
     obs = obs_mod.Obs(jsonl=metrics, name=f"train/{arch}") if metrics \
         else obs_mod.NULL
     prev_obs = obs_mod.set_active(obs)
+    # Calibrated planning is likewise opt-in and scoped to this run: the
+    # fitted table becomes the process-wide active one before any plan or
+    # topology is built, and the previous table is restored on exit.
+    prev_cal = None
+    if calibration:
+        from repro.core import calibrate
+        table = calibrate.load(calibration)
+        prev_cal = calibrate.set_active(table)
+        print(f"calibration: {table.describe()}  [{calibration}]")
     try:
         return _run(arch, obs, steps=steps, batch=batch, seq=seq,
                     scale_down=scale_down, lr=lr, microbatches=microbatches,
                     ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, resume=resume,
                     mesh=mesh, log_every=log_every, seed=seed, comms=comms,
                     pp=pp, pp_schedule=pp_schedule, hbm_gib=hbm_gib,
-                    metrics=metrics, metrics_snapshot=metrics_snapshot)
+                    metrics=metrics, metrics_snapshot=metrics_snapshot,
+                    calibration=calibration)
     finally:
+        if calibration:
+            from repro.core import calibrate
+            calibrate.set_active(prev_cal)
         obs_mod.set_active(prev_obs)
         obs.close()
 
 
 def _run(arch: str, obs, *, steps, batch, seq, scale_down, lr, microbatches,
          ckpt_dir, ckpt_every, resume, mesh, log_every, seed, comms, pp,
-         pp_schedule, hbm_gib, metrics, metrics_snapshot):
+         pp_schedule, hbm_gib, metrics, metrics_snapshot, calibration=None):
     session = Session(mesh=mesh if mesh is not None
                       else mesh_mod.make_host_mesh(pp), hbm_gib=hbm_gib,
                       obs=obs)
@@ -233,8 +252,14 @@ def _run(arch: str, obs, *, steps, batch, seq, scale_down, lr, microbatches,
             snap_path = metrics_snapshot or os.path.join(
                 os.path.dirname(os.path.abspath(metrics)) or ".",
                 "BENCH_step_metrics.json")
+            # meta carries the full cell coordinates (batch/seq/scale/...)
+            # so the calibration fitter can reconstruct the measured cell
+            # from the snapshot alone (calibrate.cell_from_meta).
             obs.snapshot(snap_path, arch=arch, steps=steps,
                          mesh=dict(session.mesh.shape),
+                         batch=batch, seq=seq, scale_down=scale_down,
+                         microbatches=plan.num_microbatches,
+                         pp_schedule=pp_schedule, calibration=calibration,
                          drift=drift.to_dict())
             print(f"metrics: {metrics}  snapshot: {snap_path}")
     return losses
@@ -269,6 +294,10 @@ def main():
     ap.add_argument("--metrics-snapshot", type=str, default=None,
                     metavar="PATH", help="override the snapshot path "
                     "(default: BENCH_step_metrics.json next to --metrics)")
+    ap.add_argument("--calibration", type=str, default=None, metavar="PATH",
+                    help="fitted calibration table (python -m repro.fit) to "
+                         "plan and predict with; default: hand-set nominal "
+                         "constants")
     args = ap.parse_args()
     try:
         losses = run(args.arch, steps=args.steps, batch=args.batch,
@@ -277,7 +306,8 @@ def main():
                      resume=args.resume, seed=args.seed, comms=args.comms,
                      pp=args.pp, pp_schedule=args.pp_schedule,
                      hbm_gib=args.hbm_gib, metrics=args.metrics,
-                     metrics_snapshot=args.metrics_snapshot)
+                     metrics_snapshot=args.metrics_snapshot,
+                     calibration=args.calibration)
     except PlanMemoryError as e:     # plan validation: clean exit, no trace
         raise SystemExit(str(e))
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")

@@ -8,10 +8,13 @@ row whose relative drift exceeds its tolerance — the gate the ROADMAP's
 calibration loop will consume (PolyDL's generate/measure/let-data-pick
 pattern needs exactly this table).
 
-On this CPU simulator the *step-time* row drifts by construction — every
-alpha/beta/FLOPs constant in the cost model is a nominal accelerator
-value — and the report says so rather than hiding it: a flagged row is
-data for the future fitter, not an error.
+Predictions resolve through the active calibration table when one is
+installed (:mod:`repro.core.calibrate` — fitted links/FLOPs/overhead via
+the planner, the probe-fitted bubble, the measured/predicted memory
+ratio), so after ``launch/train.py --calibration`` the drift below is
+model error on *this* machine, not the distance to a nominal accelerator.
+Run ``python -m repro.obs.report BENCH_*.json`` to gate on a committed
+snapshot (exit 1 on any non-waived flagged row).
 """
 
 from __future__ import annotations
@@ -21,14 +24,24 @@ import math
 from typing import Dict, List, Mapping, Optional
 
 #: Per-metric relative drift tolerance: |measured - predicted| / predicted.
-#: Bubble fraction and peak memory are structural predictions and should
-#: track within ~35%; step time is priced with nominal hardware constants
-#: (uncalibrated until the ROADMAP fitter lands), so its tolerance only
-#: catches order-of-magnitude regressions of an already-calibrated table.
+#: These assume a *calibrated* model (the fitter in
+#: ``repro.core.calibrate``; ``benchmarks/run.py calibrate`` closes the
+#: loop) and are sized to run-to-run variance on the CPU simulator, not to
+#: model quality:
+#:
+#: - ``step_time_s`` 0.5 — the fitted FLOPs/overhead reproduce the
+#:   measured p50 by construction; 50% covers scheduler noise between the
+#:   fitting run and the gating run.  (Was 10.0 — a 1000% hack papering
+#:   over the uncalibrated nominals, under which drift measured 557x.)
+#: - ``bubble_fraction`` 0.25 — the probe-fitted tick/intercept model
+#:   reproduces the slope estimator's value up to probe noise.
+#: - ``peak_bytes`` 0.2 — deterministic compile-time quantity; the
+#:   calibrated scale removes the model's systematic bias, the rest is
+#:   allocator variation.
 DEFAULT_TOLERANCES: Dict[str, float] = {
-    "step_time_s": 10.0,
-    "bubble_fraction": 0.35,
-    "peak_bytes": 0.35,
+    "step_time_s": 0.5,
+    "bubble_fraction": 0.25,
+    "peak_bytes": 0.2,
 }
 
 UNITS: Dict[str, str] = {
@@ -38,12 +51,20 @@ UNITS: Dict[str, str] = {
 }
 
 #: Gauge / histogram names the measured side is read from (the contract
-#: between the instrumentation sites and this report).
+#: between the instrumentation sites and this report).  ``span.step.s``
+#: holds steady-state steps only: compile-bearing steps land in
+#: ``span.step_warmup.s`` (Session.step detects the opcache/jit-cache
+#: miss), so warmup never counts as drift.
 MEASURED_STEP_HISTOGRAM = "span.step.s"
+WARMUP_STEP_HISTOGRAM = "span.step_warmup.s"
 MEASURED_BUBBLE_GAUGE = "pipeline.bubble.measured"
 PREDICTED_BUBBLE_GAUGE = "pipeline.bubble.predicted"
 MEASURED_PEAK_GAUGE = "memory.measured_peak_bytes"
 PREDICTED_PEAK_GAUGE = "memory.predicted_peak_bytes"
+#: Uncalibrated model peak, published alongside the calibrated
+#: PREDICTED_PEAK_GAUGE so the fitter can re-derive the scale from an
+#: already-calibrated run without compounding corrections.
+PREDICTED_RAW_PEAK_GAUGE = "memory.predicted_raw_peak_bytes"
 
 
 @dataclasses.dataclass
@@ -158,18 +179,34 @@ def predicted_step_seconds(plan) -> Optional[float]:
     return scores.get((dp, tp, pp))
 
 
+def predicted_bubble_fraction(plan_pipeline) -> float:
+    """Predicted bubble for a PipelineSpec: the calibrated probe model
+    (1 - M*b / (a + M*b)) when the active table carries a pipe fit, else
+    the structural GPipe (S-1)/(M+S-1)."""
+    from repro.core import calibrate
+    fitted = calibrate.predicted_bubble(plan_pipeline.n_stages,
+                                        plan_pipeline.num_microbatches)
+    return fitted if fitted is not None \
+        else plan_pipeline.bubble_fraction()
+
+
 def plan_predictions(plan) -> Dict[str, float]:
-    """The predicted side of the report, read off an ExecutablePlan."""
+    """The predicted side of the report, read off an ExecutablePlan.
+
+    Calibration-aware end to end: step time routes through the planner
+    (which resolves fitted links/FLOPs/overhead), the bubble prefers the
+    probe-fitted model, and peak bytes carry the fitted memory scale.
+    """
     out: Dict[str, float] = {}
     t = predicted_step_seconds(plan)
     if t is not None:
         out["step_time_s"] = t
     if plan.pipeline is not None:
-        out["bubble_fraction"] = plan.pipeline.bubble_fraction()
+        out["bubble_fraction"] = predicted_bubble_fraction(plan.pipeline)
     if plan.footprints:
         from repro.core import memory as mem_mod
         out["peak_bytes"] = float(
-            mem_mod.peak_stage_footprint(plan.footprints).total)
+            mem_mod.peak_stage_footprint(plan.footprints).calibrated_total)
     return out
 
 
@@ -221,3 +258,61 @@ def session_drift_report(plan, summary: Mapping,
     return drift_report(plan_predictions(plan),
                         measured_from_summary(summary),
                         tolerances=tolerances)
+
+
+# ---------------------------------------------------------------------------
+# CI gate: fail on flagged rows of a committed snapshot
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    """``python -m repro.obs.report BENCH_*.json [--waive METRIC ...]``
+
+    Re-reads the drift table a ``launch/train.py --metrics-snapshot`` run
+    embedded under ``meta.drift`` and exits 1 if any non-waived row is
+    flagged — the CI gate the ROADMAP calibration loop asked for.  Rows
+    are re-judged against the *current* DEFAULT_TOLERANCES (not the ones
+    baked into the snapshot), so tightening a tolerance retro-flags stale
+    snapshots until they are re-measured.
+    """
+    import argparse
+    import json
+    import sys
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="gate on a committed drift snapshot")
+    ap.add_argument("snapshot", help="BENCH_*.json written by a "
+                    "--metrics-snapshot run")
+    ap.add_argument("--waive", action="append", default=[],
+                    metavar="METRIC",
+                    help="ignore this metric's flag (repeatable)")
+    args = ap.parse_args(argv)
+
+    with open(args.snapshot) as f:
+        snap = json.load(f)
+    drift = snap.get("meta", {}).get("drift", {})
+    rows = [DriftRow(name=r["name"], predicted=r["predicted"],
+                     measured=r["measured"], unit=r.get("unit", ""),
+                     tolerance=DEFAULT_TOLERANCES.get(r["name"], 0.5))
+            for r in drift.get("rows", [])]
+    if not rows:
+        print(f"{args.snapshot}: no drift table under meta.drift",
+              file=sys.stderr)
+        return 2
+    report = DriftReport(rows=rows)
+    print(report.table())
+    bad = [r for r in report.flagged if r.name not in args.waive]
+    waived = [r for r in report.flagged if r.name in args.waive]
+    for r in waived:
+        print(f"waived: {r.name} ({r.drift:+.1%})")
+    if bad:
+        print(f"FAIL: {len(bad)} metric(s) beyond tolerance: "
+              + ", ".join(f"{r.name} ({r.drift:+.1%} > {r.tolerance:.0%})"
+                          for r in bad))
+        return 1
+    print("ok: all drift rows within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -27,6 +27,16 @@ from typing import Optional
 DEVICE_FLOPS = 100e12
 
 
+def device_flops() -> float:
+    """Effective per-device FLOPs/s: the fitted value from the active
+    calibration table when one is installed
+    (:func:`repro.core.calibrate.set_active`), else the hand-set
+    :data:`DEVICE_FLOPS` nominal."""
+    from repro.core import calibrate
+    fitted = calibrate.device_flops()
+    return fitted if fitted else DEVICE_FLOPS
+
+
 def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
     """Idle fraction of a GPipe/1F1B pipeline: (S-1)/(M+S-1)."""
     if n_stages <= 1:

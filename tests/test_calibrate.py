@@ -1,0 +1,309 @@
+"""repro.core.calibrate: fitter round trips, degenerate-data guards, and
+calibration-table load/fallback in the planner + memory model + report.
+
+The synthetic round-trip contract: generate obs events from KNOWN
+constants (link alpha/beta, pipe intercept/tick, memory ratio, device
+FLOPs via the planner's own forward formula), run the fitter, and require
+the constants back within tolerance.  Degenerate data (too few samples,
+zero-variance designs) must fall back to the hand-set defaults with a
+structured :class:`CalibrationWarning` — never crash, never extrapolate.
+"""
+
+import json
+import warnings
+
+import pytest
+
+from repro.core import calibrate
+from repro.core.calibrate import CalibrationTable, CalibrationWarning
+from repro.comms.topology import (FDR_IB, PCIE_GEN3, LinkSpec,
+                                  allreduce_design)
+
+ALPHA, BW = 3e-5, 2.5e9
+LINK = LinkSpec(latency_s=ALPHA, bandwidth_Bps=BW)
+
+
+@pytest.fixture(autouse=True)
+def _no_active_table():
+    """Every test starts and ends with no calibration installed."""
+    prev = calibrate.set_active(None)
+    yield
+    calibrate.set_active(prev)
+
+
+def _link_samples(link, sizes=(1 << 18, 1 << 20, 1 << 22),
+                  schedules=("ring", "tree"), n=8, noise=0.0):
+    out = []
+    for i, nb in enumerate(sizes):
+        for sched in schedules:
+            steps, wire = allreduce_design(nb, sched, n)
+            t = steps * link.latency_s + wire / link.bandwidth_Bps
+            out.append({"kind": "collective_sample", "schedule": sched,
+                        "nbytes": nb, "n": n, "steps": steps,
+                        "wire_bytes": wire,
+                        "seconds": t * (1 + noise * (-1) ** i)})
+    return out
+
+
+# --------------------------------------------------------------------------
+# per-constant fitters
+# --------------------------------------------------------------------------
+
+def test_fit_link_exact_round_trip():
+    link, meta = calibrate.fit_link(_link_samples(LINK))
+    assert link.latency_s == pytest.approx(ALPHA, rel=1e-6)
+    assert link.bandwidth_Bps == pytest.approx(BW, rel=1e-6)
+    assert meta["residual_rms_rel"] < 1e-9
+
+
+def test_fit_link_noisy_round_trip():
+    link, _ = calibrate.fit_link(_link_samples(LINK, noise=0.05))
+    assert link.latency_s == pytest.approx(ALPHA, rel=0.25)
+    assert link.bandwidth_Bps == pytest.approx(BW, rel=0.25)
+
+
+def test_fit_link_too_few_samples_returns_none():
+    link, meta = calibrate.fit_link(_link_samples(LINK)[:1])
+    assert link is None and "reason" in meta
+
+
+def test_fit_link_zero_variance_design_returns_none():
+    # every row the same (steps, wire) -> alpha and beta inseparable
+    rows = [{"steps": 14, "wire_bytes": 1000.0, "seconds": 0.01}] * 4
+    link, meta = calibrate.fit_link(rows)
+    assert link is None and "zero-variance" in meta["reason"]
+
+
+def test_fit_pipe_round_trip_and_predicted_bubble():
+    a, b = 0.05, 0.03
+    probe = {"microbatches": [2, 4, 8],
+             "times_s": [a + 2 * b, a + 4 * b, a + 8 * b]}
+    fa, fb, meta = calibrate.fit_pipe(probe)
+    assert fa == pytest.approx(a) and fb == pytest.approx(b)
+    assert meta["residual_rms_s"] < 1e-12
+    t = CalibrationTable(pipe_intercept_s=fa, pipe_tick_s=fb)
+    # the fitted model reproduces the slope estimator's measured bubble:
+    # 1 - M*b/(a + M*b) at M = 4
+    assert t.predicted_bubble(2, 4) == pytest.approx(
+        1 - 4 * b / (a + 4 * b))
+    assert t.predicted_bubble(1, 4) is None         # no pipeline
+
+
+def test_fit_pipe_degenerate():
+    fa, fb, meta = calibrate.fit_pipe({"microbatches": [4],
+                                       "times_s": [0.1]})
+    assert fa is None and fb is None and "reason" in meta
+    # non-positive slope (noise dominates) must refuse, not extrapolate
+    fa, fb, meta = calibrate.fit_pipe({"microbatches": [2, 4],
+                                       "times_s": [0.2, 0.1]})
+    assert fb is None and "slope" in meta["reason"]
+
+
+def test_fit_memory_scale_prefers_raw_gauge():
+    from repro.obs import report as report_mod
+    scale, _ = calibrate.fit_memory_scale({
+        report_mod.MEASURED_PEAK_GAUGE: 90.0,
+        report_mod.PREDICTED_PEAK_GAUGE: 50.0,     # already-calibrated
+        report_mod.PREDICTED_RAW_PEAK_GAUGE: 100.0})
+    assert scale == pytest.approx(0.9)
+    missing, meta = calibrate.fit_memory_scale({})
+    assert missing is None and "reason" in meta
+
+
+# --------------------------------------------------------------------------
+# the full fit: synthetic round trip + degenerate guards
+# --------------------------------------------------------------------------
+
+def _cell_meta():
+    return {"arch": "qwen2-0.5b", "mesh": {"data": 2, "model": 1},
+            "batch": 4, "seq": 16, "scale_down": 64, "microbatches": 1,
+            "pp_schedule": "gpipe"}
+
+
+def test_fit_round_trip_recovers_constants():
+    meta = _cell_meta()
+    cell = calibrate.cell_from_meta(meta)
+    flops_true = 3.7e9
+    t_step = calibrate.predicted_step_seconds_for_cell(
+        cell, intra=LINK, inter=LINK, device_flops=flops_true,
+        step_overhead_s=0.0)
+    assert t_step is not None and t_step > 0
+    snapshot = {"meta": meta, "metrics": {
+        "histograms": {"span.step.s": {"count": 6, "p50": t_step}},
+        "gauges": {"memory.measured_peak_bytes": 900.0,
+                   "memory.predicted_raw_peak_bytes": 1000.0}}}
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # pp = 1: a clean fit, no warns
+        table = calibrate.fit(_link_samples(LINK), snapshot,
+                              sources=["synthetic"])
+    assert table.inter.latency_s == pytest.approx(ALPHA, rel=1e-6)
+    assert table.inter.bandwidth_Bps == pytest.approx(BW, rel=1e-6)
+    assert table.device_flops == pytest.approx(flops_true, rel=1e-6)
+    assert table.memory_scale == pytest.approx(0.9)
+    assert table.provenance["residuals"]["step_rel"] < 1e-6
+    # and the planner, given the table, predicts the measured step back
+    prev = calibrate.set_active(table)
+    try:
+        assert calibrate.predicted_step_seconds_for_cell(cell) == \
+            pytest.approx(t_step, rel=1e-6)
+    finally:
+        calibrate.set_active(prev)
+
+
+def test_fit_degenerate_data_falls_back_with_structured_warnings():
+    with pytest.warns(CalibrationWarning):
+        table = calibrate.fit([], {"meta": {}, "metrics": {}})
+    assert table.intra is None and table.inter is None
+    assert table.device_flops is None
+    assert table.memory_scale == 1.0
+    fields = {w["field"] for w in table.provenance["warnings"]}
+    assert {"links", "memory_scale", "device_flops"} <= fields
+
+
+def test_fit_too_few_steady_steps_skips_flops():
+    snapshot = {"meta": _cell_meta(), "metrics": {
+        "histograms": {"span.step.s": {"count": 2, "p50": 0.1}},
+        "gauges": {}}}
+    with pytest.warns(CalibrationWarning):
+        table = calibrate.fit(_link_samples(LINK), snapshot)
+    assert table.device_flops is None                  # guarded
+    assert table.inter is not None                     # links still fit
+
+
+def test_fit_from_files_uses_stream_metrics_doc(tmp_path):
+    meta = _cell_meta()
+    cell = calibrate.cell_from_meta(meta)
+    t_step = calibrate.predicted_step_seconds_for_cell(
+        cell, intra=LINK, inter=LINK, device_flops=2e9,
+        step_overhead_s=0.0)
+    doc = {"kind": "metrics", "meta": meta, "metrics": {
+        "histograms": {"span.step.s": {"count": 6, "p50": t_step}},
+        "gauges": {"memory.measured_peak_bytes": 1.0,
+                   "memory.predicted_raw_peak_bytes": 1.0}}}
+    p = tmp_path / "run.jsonl"
+    with open(p, "w") as f:
+        for e in _link_samples(LINK) + [doc]:
+            f.write(json.dumps(e) + "\n")
+    table = calibrate.fit_from_files([str(p)])
+    assert table.device_flops == pytest.approx(2e9, rel=1e-6)
+    with pytest.raises(calibrate.CalibrationDataError):
+        empty = tmp_path / "empty.jsonl"
+        empty.write_text("")
+        calibrate.fit_from_files([str(empty)])
+
+
+# --------------------------------------------------------------------------
+# table persistence + versioning
+# --------------------------------------------------------------------------
+
+def test_table_save_load_round_trip(tmp_path):
+    t = CalibrationTable(intra=LINK, inter=LINK, device_flops=1.2e9,
+                         step_overhead_s=0.01, pipe_tick_s=0.03,
+                         pipe_intercept_s=0.05, memory_scale=0.9,
+                         provenance={"sources": ["x"]})
+    p = str(tmp_path / "cal.json")
+    t.save(p)
+    t2 = calibrate.load(p)
+    assert t2 == t
+    assert "link" in t2.describe() and "flops" in t2.describe()
+
+
+def test_table_version_mismatch_rejected(tmp_path):
+    p = tmp_path / "old.json"
+    p.write_text(json.dumps({"version": 999}))
+    with pytest.raises(calibrate.CalibrationDataError):
+        calibrate.load(str(p))
+
+
+# --------------------------------------------------------------------------
+# load/fallback in the consumers (planner, topology, memory, report)
+# --------------------------------------------------------------------------
+
+def test_topology_uses_active_table_and_falls_back():
+    import jax
+    from repro.comms.topology import default_links, topology_from_mesh
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    assert default_links() == (PCIE_GEN3, FDR_IB)      # no table
+    fitted = LinkSpec(latency_s=1e-4, bandwidth_Bps=1e9)
+    prev = calibrate.set_active(CalibrationTable(intra=fitted,
+                                                 inter=fitted))
+    try:
+        assert default_links() == (fitted, fitted)
+        assert topology_from_mesh(mesh).inter is fitted
+        # explicit argument always wins over the table
+        assert topology_from_mesh(mesh, inter=FDR_IB).inter is FDR_IB
+    finally:
+        calibrate.set_active(prev)
+    assert topology_from_mesh(mesh).inter is FDR_IB
+
+
+def test_planner_scores_resolve_active_table():
+    from repro.configs import get_config, scale_config
+    from repro.core.planner import score_hybrid_candidates
+    cfg = scale_config(get_config("qwen2-0.5b"), 64)
+    kw = dict(global_batch=4, seq_len=16, check_memory=False)
+    nominal = score_hybrid_candidates(cfg, 2, **kw)[(2, 1, 1)]
+    table = CalibrationTable(intra=LINK, inter=LINK, device_flops=1e9,
+                             step_overhead_s=0.5)
+    prev = calibrate.set_active(table)
+    try:
+        calibrated = score_hybrid_candidates(cfg, 2, **kw)[(2, 1, 1)]
+        # the fitted overhead alone separates the two by >= 0.5 s
+        assert calibrated > nominal + 0.4
+        # explicit constants beat the table
+        override = score_hybrid_candidates(
+            cfg, 2, device_flops=100e12, step_overhead_s=0.0,
+            intra=PCIE_GEN3, inter=FDR_IB, **kw)[(2, 1, 1)]
+        assert override == pytest.approx(nominal, rel=1e-6)
+    finally:
+        calibrate.set_active(prev)
+
+
+def test_memory_fits_applies_calibrated_scale():
+    from repro.core.memory import Footprint, as_budget
+    budget = as_budget(1 << 30)
+    over = Footprint(params=int(as_budget(1 << 30).usable * 1.1))
+    assert not over.fits(budget)
+    prev = calibrate.set_active(CalibrationTable(memory_scale=0.8))
+    try:
+        assert over.fits(budget)          # 1.1 * 0.8 = 0.88 of usable
+        assert over.calibrated_total == pytest.approx(over.total * 0.8)
+    finally:
+        calibrate.set_active(prev)
+    assert not over.fits(budget)
+
+
+def test_report_predicted_bubble_prefers_fit():
+    from types import SimpleNamespace
+    from repro.obs import report as report_mod
+    spec = SimpleNamespace(n_stages=2, num_microbatches=4,
+                           bubble_fraction=lambda: 0.2)
+    assert report_mod.predicted_bubble_fraction(spec) == 0.2
+    a, b = 0.05, 0.03
+    prev = calibrate.set_active(CalibrationTable(pipe_intercept_s=a,
+                                                 pipe_tick_s=b))
+    try:
+        assert report_mod.predicted_bubble_fraction(spec) == \
+            pytest.approx(1 - 4 * b / (a + 4 * b))
+    finally:
+        calibrate.set_active(prev)
+
+
+def test_report_cli_gate(tmp_path, capsys):
+    from repro.obs import report as report_mod
+    snap = {"meta": {"drift": {"rows": [
+        {"name": "step_time_s", "predicted": 0.1, "measured": 0.11,
+         "unit": "s"},
+        {"name": "bubble_fraction", "predicted": 0.2, "measured": 0.5,
+         "unit": "frac"}]}}}
+    p = str(tmp_path / "BENCH_x.json")
+    with open(p, "w") as f:
+        json.dump(snap, f)
+    assert report_mod.main([p]) == 1                   # bubble flagged
+    assert report_mod.main([p, "--waive", "bubble_fraction"]) == 0
+    out = capsys.readouterr().out
+    assert "waived: bubble_fraction" in out
+    empty = str(tmp_path / "BENCH_empty.json")
+    with open(empty, "w") as f:
+        json.dump({"meta": {}}, f)
+    assert report_mod.main([empty]) == 2
