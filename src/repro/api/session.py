@@ -456,7 +456,8 @@ class Session:
     # ------------------------------------------------------------------
     def serve(self, plan: ExecutablePlan, *, batch_slots: int,
               max_seq: int, temperature: float = 0.0, seed: int = 0,
-              name: str = "serve"):
+              name: str = "serve", paged: bool = False,
+              page_size: int = 64):
         """Build the batched engine on the session's persistent state.
 
         Params live in the state registry under ``{name}/params`` (reused
@@ -465,6 +466,10 @@ class Session:
         registered under ``{name}/kv_cache`` so its footprint is
         accounted; the engine's jitted prefill/decode steps come from the
         session's compiled-artifact cache.
+
+        ``paged=True`` allocates the cache as a pool of ``page_size``
+        pages behind an indices table and decodes through the paged
+        attention kernel (plain-attention families only).
         """
         from repro.serve import Engine
 
@@ -492,7 +497,8 @@ class Session:
         return Engine(model, params, batch_slots, max_seq,
                       temperature=temperature, seed=seed,
                       opcache=self.opcache, registry=self.state,
-                      cache_key=f"{name}/kv_cache", obs=self.obs)
+                      cache_key=f"{name}/kv_cache", obs=self.obs,
+                      paged=paged, page_size=page_size)
 
     # ------------------------------------------------------------------
     # the linalg surface

@@ -98,6 +98,48 @@ def flatten_buckets(plan: BucketPlan, tree) -> List[jax.Array]:
     return [jnp.concatenate(p) if len(p) > 1 else p[0] for p in parts]
 
 
+def flatten_buckets_fused(plan: BucketPlan, tree, wire_dtype: str):
+    """Pack the pytree AND fold the wire format's prologue into the pass.
+
+    The unfused pipeline is flatten (write fp32 bucket) -> wire prologue
+    (re-read it: bf16 narrows, int8 reduces an absmax then casts).  Fusing
+    the prologue into the pack removes the fp32 bucket round trip:
+
+    - ``bf16``: each leaf narrows *while being packed* (cast commutes with
+      reshape/concatenate elementwise), so buckets come out already in the
+      wire dtype;
+    - ``int8``: buckets stay in the plan dtype, but each bucket's local
+      absmax falls out of the same pass as a max of per-leaf maxes
+      (floating max is exact — bit-identical to reducing the packed
+      bucket), killing the separate absmax sweep.  The caller agrees the
+      scale across the group (pmax) and quantizes via
+      ``kernels.ops.quantize_int8`` — the single remaining cast pass.
+
+    Returns ``(buckets, absmaxes)``; ``absmaxes`` is None unless int8.
+    """
+    leaves = jax.tree.leaves(tree)
+    assert len(leaves) == len(plan.slots), "tree does not match plan"
+    if wire_dtype == "bf16":
+        parts: List[List[jax.Array]] = [[] for _ in range(plan.num_buckets)]
+        for leaf, slot in zip(leaves, plan.slots):
+            parts[slot.bucket].append(
+                leaf.reshape(-1).astype(plan.dtype).astype(jnp.bfloat16))
+        return ([jnp.concatenate(p) if len(p) > 1 else p[0] for p in parts],
+                None)
+    if wire_dtype == "int8":
+        parts = [[] for _ in range(plan.num_buckets)]
+        maxes: List[List[jax.Array]] = [[] for _ in range(plan.num_buckets)]
+        for leaf, slot in zip(leaves, plan.slots):
+            flat = leaf.reshape(-1).astype(plan.dtype)
+            parts[slot.bucket].append(flat)
+            maxes[slot.bucket].append(
+                jnp.max(jnp.abs(flat.astype(jnp.float32))))
+        buckets = [jnp.concatenate(p) if len(p) > 1 else p[0] for p in parts]
+        absmaxes = [jnp.max(jnp.stack(m)) for m in maxes]
+        return buckets, absmaxes
+    raise ValueError(f"no fused flatten for wire_dtype {wire_dtype!r}")
+
+
 def unflatten_buckets(plan: BucketPlan, buckets: Sequence[jax.Array]):
     """Invert :func:`flatten_buckets`, restoring shapes and dtypes."""
     leaves = []

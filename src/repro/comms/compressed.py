@@ -73,3 +73,50 @@ def wire_all_reduce(
 
     raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
                      "expected None, 'bf16' or 'int8'")
+
+
+def wire_all_reduce_fused(
+    x: jax.Array,
+    axes: Sequence[str],
+    schedule: str = "psum",
+    wire_dtype: Optional[str] = None,
+    intra_axis: str = "model",
+    *,
+    absmax: Optional[jax.Array] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """:func:`wire_all_reduce` for buckets packed by
+    ``bucketer.flatten_buckets_fused`` — the wire prologue already ran.
+
+    - ``bf16``: ``x`` arrives narrowed; only the collective + widen remain.
+    - ``int8``: ``absmax`` is the bucket's local absmax (folded into the
+      pack); agree it with a ``pmax``, then the quantize is one cast pass
+      through :func:`repro.kernels.ops.quantize_int8` (the Pallas kernel
+      on TPU).  Identical affine semantics to the unfused path; the wire
+      still physically moves int32 on this CPU simulator (see module
+      docstring) while the cost model credits 1 byte/element.
+    """
+    axes = tuple(axes)
+    out_dtype = out_dtype or x.dtype
+    if not axes:
+        return x.astype(out_dtype)
+    if wire_dtype in (None, "none", "fp32"):
+        return schedules.all_reduce(x, axes, schedule, intra_axis
+                                    ).astype(out_dtype)
+
+    if wire_dtype == "bf16":
+        assert x.dtype == jnp.bfloat16, x.dtype
+        out = schedules.all_reduce(x, axes, schedule, intra_axis)
+        return out.astype(out_dtype)
+
+    if wire_dtype == "int8":
+        assert absmax is not None, "int8 fused path needs the packed absmax"
+        from repro.kernels import ops as _kops
+        scale = _group_max(absmax, axes) / 127.0 + 1e-12
+        q = _kops.quantize_int8(x.astype(jnp.float32), scale
+                                ).astype(jnp.int32)
+        summed = schedules.all_reduce(q, axes, schedule, intra_axis)
+        return (summed.astype(jnp.float32) * scale).astype(out_dtype)
+
+    raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
+                     "expected None, 'bf16' or 'int8'")

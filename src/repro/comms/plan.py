@@ -31,6 +31,28 @@ class CommsPlan:
     bucket_bytes: int = bucketer.DEFAULT_BUCKET_BYTES
     mean: bool = True                    # pmean (grads) vs psum semantics
     intra_axis: str = "model"            # fast axis for "hier"
+    fused: str = "auto"                  # fused quantize-compress pack:
+                                         # "auto" | "on" | "off"
+
+    def fused_active(self) -> bool:
+        """Does :func:`sync_tree` pack with the fused quantize-compress?
+
+        Only meaningful with a narrowing ``wire_dtype``.  ``auto`` follows
+        the kernel dispatch layer: fused wherever Pallas runs (TPU, or
+        interpret mode opted into via REPRO_KERNELS), reference packing
+        elsewhere — so CPU tier-1 exercises the seed path unchanged.  The
+        two pack paths are numerically identical by construction (cast
+        commutes with concat; max-of-maxes is floating-exact); the fused
+        one just removes the fp32 bucket round trip on hardware.
+        """
+        if self.wire_dtype not in ("bf16", "int8"):
+            return False
+        if self.fused == "on":
+            return True
+        if self.fused == "off":
+            return False
+        from repro.kernels import ops as _kops
+        return _kops.resolve("comms_fused_pack") != "ref"
 
     def resolve(self, mesh: Mesh, nbytes: int,
                 topo: Optional[topo_mod.Topology] = None) -> str:
@@ -79,7 +101,13 @@ def sync_tree(grads, plan: CommsPlan, mesh: Mesh,
     sched = plan.resolve(
         mesh, sum(4 * leaf.size for leaf in jax.tree.leaves(grads)))
     bplan = bucketer.plan_buckets(grads, plan.bucket_bytes)
-    buckets = bucketer.flatten_buckets(bplan, grads)
+    fused = plan.fused_active()
+    if fused:
+        buckets, absmaxes = bucketer.flatten_buckets_fused(
+            bplan, grads, plan.wire_dtype)
+    else:
+        buckets = bucketer.flatten_buckets(bplan, grads)
+        absmaxes = None
 
     # Telemetry (trace time, once per compile — these counters therefore
     # record PER-STEP wire traffic of the compiled program, exactly the
@@ -87,19 +115,31 @@ def sync_tree(grads, plan: CommsPlan, mesh: Mesh,
     obs = obs_mod.get_active()
     if obs.enabled:
         ratio = compressed.WIRE_RATIO.get(plan.wire_dtype, 1.0)
-        payload = int(sum(4 * b.size for b in buckets) * ratio)
+        payload = int(sum(4 * bplan.bucket_sizes[i]
+                          for i in range(bplan.num_buckets)) * ratio)
         obs.counter(f"comms.{sched}.buckets").inc(len(buckets))
         obs.counter(f"comms.{sched}.wire_bytes").inc(payload)
         obs.counter("comms.wire_bytes").inc(payload)
+        if fused:
+            obs.counter("comms.fused_pack").inc(len(buckets))
         obs.event("comms_sync", schedule=sched,
                   wire_dtype=plan.wire_dtype or "fp32",
                   buckets=len(buckets), wire_bytes=payload,
-                  axes=list(axes))
-    reduced = [
-        compressed.wire_all_reduce(b, axes, sched, plan.wire_dtype,
-                                   plan.intra_axis)
-        for b in buckets
-    ]
+                  fused=fused, axes=list(axes))
+    if fused:
+        reduced = [
+            compressed.wire_all_reduce_fused(
+                b, axes, sched, plan.wire_dtype, plan.intra_axis,
+                absmax=(absmaxes[i] if absmaxes is not None else None),
+                out_dtype=bplan.dtype)
+            for i, b in enumerate(buckets)
+        ]
+    else:
+        reduced = [
+            compressed.wire_all_reduce(b, axes, sched, plan.wire_dtype,
+                                       plan.intra_axis)
+            for b in buckets
+        ]
     if plan.mean:
         n = group_size(mesh.shape, axes)
         reduced = [b / n for b in reduced]

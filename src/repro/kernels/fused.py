@@ -1,0 +1,135 @@
+"""Fused quantize-compress Pallas kernels (the comms wire-format hot path).
+
+The unfused int8 wire path (:mod:`repro.comms.compressed`) is three
+passes over the gradient bucket: pack leaves into a flat fp32 bucket,
+reduce the bucket for its absmax, then round/clip/cast against the agreed
+scale.  On TPU each pass is an HBM round trip of the full bucket.  The
+kernels here collapse the element-wise passes:
+
+- :func:`quantize_compress` — absmax + quantize in ONE ``pallas_call``:
+  a two-phase grid (phase 0 streams blocks accumulating ``max|x|`` into a
+  VMEM scratch scalar, phase 1 re-streams them emitting int8) so the wire
+  payload is produced without ever materializing an intermediate in HBM.
+  This is the single-device form (serving-side weight/activation
+  compression, benchmarks).
+- :func:`quantize_int8` — the scale is an *input* (one phase).  This is
+  the form the gradient-sync path uses: the bucketer folds the local
+  absmax into its flatten pass, a ``pmax`` agrees the scale across the
+  group, and this kernel does the single remaining cast pass.
+
+Both are pinned to the exact semantics of ``comms/compressed.py``:
+``scale = absmax / 127 + 1e-12``; ``q = clip(round(x / scale), ±127)``.
+Non-tile-aligned sizes are zero-padded internally (zero padding cannot
+raise an absmax) and sliced back out.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+#: int8 min tile is (32, 128); one block is therefore 32*128 elements.
+_LANES = 128
+_SUBLANES = 32
+_BLOCK = _SUBLANES * _LANES
+
+
+def _pad_2d(x: jax.Array) -> Tuple[jax.Array, int]:
+    """Flatten and zero-pad to a whole number of (32, 128) int8 tiles."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.size
+    pad = (-n) % _BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, _LANES), n
+
+
+def _qc_kernel(x_ref, q_ref, scale_ref, amax_ref, *, n_blocks: int):
+    phase = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((phase == 0) & (j == 0))
+    def _init():
+        amax_ref[0, 0] = 0.0
+
+    @pl.when(phase == 0)
+    def _accumulate():
+        amax_ref[0, 0] = jnp.maximum(amax_ref[0, 0],
+                                     jnp.max(jnp.abs(x_ref[...])))
+
+    @pl.when(phase == 1)
+    def _quantize():
+        scale = amax_ref[0, 0] / 127.0 + 1e-12
+        q_ref[...] = jnp.clip(jnp.round(x_ref[...] / scale),
+                              -127, 127).astype(jnp.int8)
+
+        @pl.when(j == n_blocks - 1)
+        def _emit_scale():
+            scale_ref[0, 0] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_compress(x: jax.Array, *, interpret: bool = False
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """One-pallas-call absmax + int8 quantize of ``x`` (any shape).
+
+    Returns ``(q, scale)`` with ``q`` int8 in ``x``'s shape and ``scale``
+    a float32 scalar, matching ``comms/compressed.py``'s affine format.
+    """
+    x2, n = _pad_2d(x)
+    rows = x2.shape[0]
+    n_blocks = rows // _SUBLANES
+    q2, scale = pl.pallas_call(
+        functools.partial(_qc_kernel, n_blocks=n_blocks),
+        grid=(2, n_blocks),
+        in_specs=[pl.BlockSpec((_SUBLANES, _LANES), lambda p, j: (j, 0))],
+        out_specs=[
+            pl.BlockSpec((_SUBLANES, _LANES), lambda p, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda p, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x2.shape, jnp.int8),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1, 1), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="dmath_quantize_compress",
+    )(x2)
+    return q2.reshape(-1)[:n].reshape(x.shape), scale[0, 0]
+
+
+def _q_kernel(s_ref, x_ref, q_ref):
+    scale = s_ref[0, 0]
+    q_ref[...] = jnp.clip(jnp.round(x_ref[...] / scale),
+                          -127, 127).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_int8(x: jax.Array, scale: jax.Array, *,
+                  interpret: bool = False) -> jax.Array:
+    """Single-pass round/clip/cast against a precomputed (agreed) scale."""
+    x2, n = _pad_2d(x)
+    rows = x2.shape[0]
+    q2 = pl.pallas_call(
+        _q_kernel,
+        grid=(rows // _SUBLANES,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((_SUBLANES, _LANES), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((_SUBLANES, _LANES), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.int8),
+        interpret=interpret,
+        name="dmath_quantize_int8",
+    )(scale.astype(jnp.float32).reshape(1, 1), x2)
+    return q2.reshape(-1)[:n].reshape(x.shape)

@@ -83,3 +83,77 @@ def matmul(
         interpret=interpret,
         name="dmath_gemm",
     )(a, b)
+
+
+def _matmul_dequant_kernel(a_ref, b_ref, s_ref, o_ref, acc_ref, *,
+                           n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # int8 weights widen to the activation dtype in VMEM (exact: |q|<=127)
+    # and hit the MXU as a normal narrow-precision dot.
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...].astype(a_ref.dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        # dequant epilogue: one per-column scale multiply on the fp32
+        # accumulator — the scale commutes with the k-sum, so this equals
+        # dequantizing B up front without ever materializing bf16 B in HBM.
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"),
+)
+def matmul_dequant(
+    a: jax.Array,                 # (M, K) bf16/fp32 activations
+    b_q: jax.Array,               # (K, N) int8 quantized weights
+    b_scale: jax.Array,           # (N,) fp32 per-column scales
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+    out_dtype: Optional[jnp.dtype] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """C[M,N] = (A @ B_q) * scale — int8->narrow dequant fused as a GEMM
+    epilogue (the storage side of dMath §4.2's reduced-precision GEMMs).
+
+    The unfused composition materializes the dequantized B (2*K*N extra
+    HBM bytes written + re-read); here B streams as 1-byte values and the
+    scale is applied once per output tile.
+    """
+    M, K = a.shape
+    K2, N = b_q.shape
+    assert K == K2, (a.shape, b_q.shape)
+    assert b_scale.shape == (N,), b_scale.shape
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        f"({M},{N},{K}) not tiled by ({bm},{bn},{bk})")
+    out_dtype = out_dtype or a.dtype
+    n_k = K // bk
+
+    return pl.pallas_call(
+        functools.partial(_matmul_dequant_kernel, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="dmath_gemm_dequant",
+    )(a, b_q, b_scale.astype(jnp.float32).reshape(1, N))

@@ -5,6 +5,22 @@ interpret-mode kernel vs pure-jnp reference) is made once here.  This is
 the same role dMath's kernel-selection layer plays (§4.1: the library picks
 the algorithm; the asterisked results show the fallback firing).
 
+Two gates sit between a call and a fused kernel:
+
+1. **availability** — :func:`pallas_supported` probes ONCE whether a tiny
+   Pallas kernel actually lowers and runs on this backend.  A requested
+   ``pallas`` mode silently demotes to ``ref`` when the probe fails
+   (lowering errors cannot be caught inside an outer jit trace, so the
+   decision must happen before tracing) and the demotion is counted in
+   ``repro.obs`` (``kernels.fallback.*``).
+2. **roofline** — :mod:`repro.kernels.roofline` decides per call-shape
+   whether the fusion pays: fused kernels win on memory-bound shapes by
+   eliminating HBM round trips; on compute-bound shapes XLA's reference
+   composition already keeps the MXU busy and dispatch keeps it.
+
+Every decision lands in :func:`dispatch_report` so BENCH_* snapshots can
+record which fused kernels were active for the measured cell.
+
 Env/config knobs:
   REPRO_KERNELS = "pallas" | "interpret" | "ref"   (default: pallas on TPU,
                                                     ref elsewhere)
@@ -13,15 +29,19 @@ Env/config knobs:
 from __future__ import annotations
 
 import os
-from functools import partial
-from typing import Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs as obs_mod
+
 from . import flash_attention as _fa
+from . import fused as _fused
 from . import gemm as _gemm
+from . import paged_attention as _paged
 from . import ref as _ref
+from . import roofline as _roofline
 from . import ssd_scan as _ssd
 
 
@@ -32,8 +52,85 @@ def backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def matmul(a, b, out_dtype=None, *, bm=256, bn=256, bk=512):
+# --------------------------------------------------------------------------
+# Availability probe + graceful fallback
+# --------------------------------------------------------------------------
+
+_PALLAS_OK: Optional[bool] = None
+
+
+def pallas_supported() -> bool:
+    """Can a Pallas kernel lower AND execute on this backend?  Cached.
+
+    Compiles and runs a minimal pallas_call (no interpret).  On backends
+    without Mosaic support (this CPU container) the lowering raises; we
+    catch everything because the failure mode is version/backend-specific.
+    """
+    global _PALLAS_OK
+    if _PALLAS_OK is None:
+        try:
+            from jax.experimental import pallas as pl
+
+            def _probe(x_ref, o_ref):
+                o_ref[...] = x_ref[...] + 1.0
+
+            x = jnp.zeros((8, 128), jnp.float32)
+            out = pl.pallas_call(
+                _probe, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            )(x)
+            jax.block_until_ready(out)
+            _PALLAS_OK = True
+        except Exception:
+            _PALLAS_OK = False
+    return _PALLAS_OK
+
+
+def resolve(op: str = "") -> str:
+    """Effective mode for one op call: ``backend()`` demoted to ``ref``
+    when Pallas is unavailable, with the demotion counted in obs."""
     mode = backend()
+    if mode == "pallas" and not pallas_supported():
+        obs = obs_mod.get_active()
+        if obs.enabled:
+            obs.counter("kernels.fallback.pallas_unavailable").inc()
+            if op:
+                obs.counter(f"kernels.fallback.{op}").inc()
+        return "ref"
+    return mode
+
+
+# --------------------------------------------------------------------------
+# Dispatch report (BENCH_* meta: which fused kernels were active)
+# --------------------------------------------------------------------------
+
+_DECISIONS: Dict[str, Dict] = {}
+
+
+def _record(d: "_roofline.GateDecision", mode: str) -> bool:
+    """Log a gate decision (latest per op wins) and bump obs counters.
+    Returns whether the fused kernel actually runs (gate AND backend)."""
+    active = d.fused and mode in ("pallas", "interpret")
+    _DECISIONS[d.op] = {**d.to_dict(), "mode": mode, "active": active}
+    obs = obs_mod.get_active()
+    if obs.enabled:
+        verdict = "fused" if active else "ref"
+        obs.counter(f"kernels.dispatch.{d.op}.{verdict}").inc()
+    return active
+
+
+def dispatch_report() -> Dict[str, Dict]:
+    """Latest gate decision per fused op (for snapshot meta)."""
+    return {"backend": backend(),
+            "pallas_supported": pallas_supported(),
+            "ops": dict(sorted(_DECISIONS.items()))}
+
+
+# --------------------------------------------------------------------------
+# Original ops (PRs 1-7): GEMM / flash attention / SSD
+# --------------------------------------------------------------------------
+
+def matmul(a, b, out_dtype=None, *, bm=256, bn=256, bk=512):
+    mode = resolve("matmul")
     if mode == "ref":
         return _ref.matmul(a, b, out_dtype)
     return _gemm.matmul(a, b, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype,
@@ -42,7 +139,7 @@ def matmul(a, b, out_dtype=None, *, bm=256, bn=256, bk=512):
 
 def attention(q, k, v, *, causal=True, window=None, softcap=None,
               scale=None, q_offset=0, bq=256, bkv=256):
-    mode = backend()
+    mode = resolve("attention")
     if mode == "ref":
         return _ref.attention(q, k, v, causal=causal, window=window,
                               softcap=softcap, scale=scale, q_offset=q_offset)
@@ -53,7 +150,7 @@ def attention(q, k, v, *, causal=True, window=None, softcap=None,
 
 def ssd(x, dt, A, Bm, C, *, chunk=256, init_state=None
         ) -> Tuple[jax.Array, jax.Array]:
-    mode = backend()
+    mode = resolve("ssd")
     if mode == "ref" or init_state is not None:
         # the kernel path has no initial-state input (training starts at 0);
         # chunked serving with carry-in uses the oracle semantics.
@@ -63,3 +160,110 @@ def ssd(x, dt, A, Bm, C, *, chunk=256, init_state=None
 
 
 ssd_step = _ref.ssd_step   # single-token decode: pure jnp everywhere
+
+
+# --------------------------------------------------------------------------
+# Fused quantize-compress (comms wire format)
+# --------------------------------------------------------------------------
+
+def _gate_quantize(op: str, n: int) -> "_roofline.GateDecision":
+    # Reference composition: flatten writes the fp32 bucket (4n), the
+    # absmax pass re-reads it (4n), the quantize pass re-reads it (4n)
+    # and writes int8 (n).  Fused-into-flatten: the two kernel phases
+    # read the leaves' 4n twice and write int8 once — the intermediate
+    # fp32 bucket round trip disappears.
+    return _roofline.gate(op, flops=4.0 * n,
+                          bytes_ref=13 * n, bytes_fused=9 * n)
+
+
+def quantize_compress(x) -> Tuple[jax.Array, jax.Array]:
+    """(q int8, scale) of ``x`` — fused absmax+cast when the gate says
+    the single-kernel form pays, else the two-pass reference."""
+    mode = resolve("quantize_compress")
+    if _record(_gate_quantize("quantize_compress", x.size), mode):
+        return _fused.quantize_compress(x, interpret=(mode == "interpret"))
+    return _ref.quantize_compress(x)
+
+
+def quantize_int8(x, scale) -> jax.Array:
+    """Cast against a precomputed (group-agreed) scale — the post-pmax
+    half of the comms int8 wire format."""
+    mode = resolve("quantize_int8")
+    if _record(_gate_quantize("quantize_int8", x.size), mode):
+        return _fused.quantize_int8(x, scale,
+                                    interpret=(mode == "interpret"))
+    return _ref.quantize_int8(x, scale)
+
+
+quantize_int8_per_channel = _ref.quantize_int8_per_channel  # offline prep
+
+
+# --------------------------------------------------------------------------
+# Paged-attention decode (serving engine)
+# --------------------------------------------------------------------------
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                           scale=None):
+    B, Hq, hd = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    n_pages = block_table.shape[1]
+    mode = resolve("paged_decode_attention")
+    T = n_pages * page
+    kv_elt = jnp.dtype(k_pages.dtype).itemsize
+    q_bytes = q.size * jnp.dtype(q.dtype).itemsize
+    kv_bytes = 2 * B * T * Hkv * hd * kv_elt
+    # reference materializes fp32 scores + probs (write + re-read each)
+    scores = 4 * B * Hq * T * 4
+    d = _roofline.gate("paged_decode_attention",
+                       flops=4.0 * B * Hq * T * hd,
+                       bytes_ref=kv_bytes + 2 * q_bytes + scores,
+                       bytes_fused=kv_bytes + 2 * q_bytes)
+    if _record(d, mode):
+        return _paged.paged_decode_attention(
+            q, k_pages, v_pages, block_table, seq_lens, scale=scale,
+            interpret=(mode == "interpret"))
+    return _ref.paged_decode_attention(q, k_pages, v_pages, block_table,
+                                       seq_lens, scale=scale)
+
+
+# --------------------------------------------------------------------------
+# Dequant-fused GEMM epilogue
+# --------------------------------------------------------------------------
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def matmul_dequant(a, b_q, b_scale, out_dtype=None, *,
+                   bm=256, bn=256, bk=512):
+    """C = (A @ B_q) * scale with the dequant fused into the GEMM epilogue.
+
+    Memory-bound shapes (decode-time skinny M) route to the Pallas kernel;
+    compute-bound shapes keep XLA's composition (the GEMM dominates and
+    the 2*K*N dequant bytes are noise there) — the roofline gate decides.
+    Pads non-tiled shapes with zeros (scale padding is irrelevant: the
+    padded output columns are sliced away).
+    """
+    M, K = a.shape
+    _, N = b_q.shape
+    mode = resolve("matmul_dequant")
+    elt = jnp.dtype(a.dtype).itemsize
+    out_elt = jnp.dtype(out_dtype or a.dtype).itemsize
+    base = M * K * elt + K * N + N * 4 + M * N * out_elt
+    d = _roofline.gate("matmul_dequant", flops=2.0 * M * N * K,
+                       bytes_ref=base + 2 * K * N * elt,
+                       bytes_fused=base)
+    if _record(d, mode):
+        interp = (mode == "interpret")
+        Mp = _round_up(M, bm if M > bm else 8)
+        Np = _round_up(N, bn if N > bn else 128)
+        Kp = _round_up(K, bk if K > bk else 128)
+        if (Mp, Kp, Np) != (M, K, N):
+            a = jnp.pad(a, ((0, Mp - M), (0, Kp - K)))
+            b_q = jnp.pad(b_q, ((0, Kp - K), (0, Np - N)))
+            b_scale = jnp.pad(b_scale, (0, Np - N))
+        out = _gemm.matmul_dequant(
+            a, b_q, b_scale, bm=min(bm, Mp), bn=min(bn, Np),
+            bk=min(bk, Kp), out_dtype=out_dtype, interpret=interp)
+        return out[:M, :N]
+    return _ref.matmul_dequant(a, b_q, b_scale, out_dtype)

@@ -1,0 +1,120 @@
+"""Block-paged KV decode attention — Pallas kernel for the serving engine.
+
+The engine's dense decode attends one query token per sequence against a
+``(B, S_max, Hkv, hd)`` cache, touching ``S_max`` rows no matter how short
+the live sequence is.  Here the KV cache lives in fixed-size *pages*
+``(P, page, Hkv, hd)`` and each sequence owns an ordered list of page
+indices (its row of ``block_table``).  The kernel walks a sequence's pages
+through a scalar-prefetched indices table — the grid index map reads
+``block_table[b, j]`` to pick which physical page to stream next — and
+runs the classic online-softmax accumulation across pages, masking the
+tail of the last live page against ``seq_lens``.
+
+This is the indirection layer a continuous-batching engine needs: slots
+can grow page-by-page and the physical pages need not be contiguous; the
+kernel never sees anything but the table.
+
+Grid: ``(B, Hkv, n_pages)`` with pages innermost (sequential) so the
+(m, l, acc) online-softmax state lives in VMEM scratch across a
+sequence's pages.  Query heads are grouped GQA-style: the ``g = Hq/Hkv``
+queries sharing a KV head ride along as rows of one block.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, page: int, scale: float,
+                         n_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale           # (g, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)                # (page, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (g, page)
+    kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    s = jnp.where(kpos < len_ref[b], s, -jnp.inf)
+
+    # online softmax update (page 0 always holds position 0, so m starts
+    # finite and fully-masked trailing pages contribute exact zeros)
+    m_prev = m_ref[...]                                   # (g, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                # (g, page)
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_pages - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(
+    q: jax.Array,             # (B, Hq, hd)   one query token per sequence
+    k_pages: jax.Array,       # (P, page, Hkv, hd)
+    v_pages: jax.Array,       # (P, page, Hkv, hd)
+    block_table: jax.Array,   # (B, n_pages) int32 — physical page per slot
+    seq_lens: jax.Array,      # (B,) int32 — live length (pos + 1)
+    *,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, hd = q.shape
+    P, page, Hkv, hd2 = k_pages.shape
+    assert hd == hd2 and Hq % Hkv == 0, (q.shape, k_pages.shape)
+    g = Hq // Hkv
+    n_pages = block_table.shape[1]
+    scale = scale if scale is not None else 1.0 / (hd ** 0.5)
+
+    q4 = q.reshape(B, Hkv, g, hd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, j, tbl, lens:
+                         (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd), lambda b, h, j, tbl, lens:
+                         (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, hd), lambda b, h, j, tbl, lens:
+                         (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b, h, j, tbl, lens:
+                               (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),      # running max
+            pltpu.VMEM((g, 1), jnp.float32),      # running denominator
+            pltpu.VMEM((g, hd), jnp.float32),     # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, page=page, scale=scale,
+                          n_pages=n_pages),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="dmath_paged_decode",
+    )(block_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      q4, k_pages, v_pages)
+    return out.reshape(B, Hq, hd)

@@ -25,6 +25,49 @@ def matmul(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
     return c.astype(out_dtype)
 
 
+def matmul_dequant(a: jax.Array, b_q: jax.Array, b_scale: jax.Array,
+                   out_dtype=None) -> jax.Array:
+    """C = (A @ B_q) * scale — the unfused composition: widen the int8
+    weights to the activation dtype (exact), matmul, scale the fp32 result
+    per column.  Per-column scales commute with the k-sum, so this defines
+    the fused epilogue's semantics."""
+    out_dtype = out_dtype or a.dtype
+    c = jnp.matmul(a, b_q.astype(a.dtype),
+                   preferred_element_type=jnp.float32)
+    return (c * b_scale.astype(jnp.float32)[None, :]).astype(out_dtype)
+
+
+# --------------------------------------------------------------------------
+# Quantize-compress (the int8 wire format of comms/compressed.py)
+# --------------------------------------------------------------------------
+
+def quantize_compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(q int8, scale fp32 scalar) with comms/compressed.py's exact affine
+    format: scale = absmax/127 + 1e-12, q = clip(round(x/scale), +-127)."""
+    v = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(v))
+    scale = absmax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_int8(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Round/clip/cast against a precomputed (group-agreed) scale."""
+    v = x.astype(jnp.float32)
+    return jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+
+
+def quantize_int8_per_channel(w: jax.Array
+                              ) -> Tuple[jax.Array, jax.Array]:
+    """Per-output-column int8 weights for the dequant-fused GEMM:
+    (q (K,N) int8, scale (N,) fp32)."""
+    v = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(v), axis=0)
+    scale = absmax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(v / scale[None, :]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
 # --------------------------------------------------------------------------
 # Attention (GQA + causal + sliding window + logit softcap)
 # --------------------------------------------------------------------------
@@ -69,6 +112,40 @@ def attention(
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhst,bhtd->bhsd", probs, vf)
     return out.astype(q.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,             # (B, Hq, hd)   one query token per sequence
+    k_pages: jax.Array,       # (P, page, Hkv, hd)
+    v_pages: jax.Array,       # (P, page, Hkv, hd)
+    block_table: jax.Array,   # (B, n_pages) int32
+    seq_lens: jax.Array,      # (B,) int32 — live length (pos + 1)
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Gather-then-attend definition of the paged decode kernel.
+
+    Logical page j of sequence b is physical page ``block_table[b, j]``;
+    gathering rebuilds the dense (B, T, Hkv, hd) cache, then the math is
+    ``models/layers.decode_attention`` with the mask ``t < seq_lens[b]``.
+    """
+    B, Hq, hd = q.shape
+    _, page, Hkv, _ = k_pages.shape
+    n_pages = block_table.shape[1]
+    g = Hq // Hkv
+    T = n_pages * page
+    scale = scale if scale is not None else 1.0 / (hd ** 0.5)
+
+    kf = k_pages[block_table].reshape(B, T, Hkv, hd).astype(jnp.float32)
+    vf = v_pages[block_table].reshape(B, T, Hkv, hd).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, hd) * scale
+
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, kf)            # (B,Hkv,g,T)
+    mask = jnp.arange(T)[None, :] < seq_lens[:, None]    # (B,T)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, vf)
+    return out.reshape(B, Hq, hd).astype(q.dtype)
 
 
 # --------------------------------------------------------------------------

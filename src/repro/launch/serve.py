@@ -25,7 +25,8 @@ from repro.serve import Request
 def run(arch: str, *, n_requests: int = 8, batch_slots: int = 4,
         max_seq: int = 128, prompt_len: int = 16, new_tokens: int = 16,
         scale_down: int = 64, seed: int = 0, mesh=None,
-        metrics: Optional[str] = None):
+        metrics: Optional[str] = None, paged: bool = False,
+        page_size: int = 64):
     # --metrics: stream plan/lower spans + per-request prefill/decode
     # latency histograms as JSONL; off -> NULL obs, output unchanged.
     obs = obs_mod.Obs(jsonl=metrics, name=f"serve/{arch}") if metrics \
@@ -36,14 +37,14 @@ def run(arch: str, *, n_requests: int = 8, batch_slots: int = 4,
                     batch_slots=batch_slots, max_seq=max_seq,
                     prompt_len=prompt_len, new_tokens=new_tokens,
                     scale_down=scale_down, seed=seed, mesh=mesh,
-                    metrics=metrics)
+                    metrics=metrics, paged=paged, page_size=page_size)
     finally:
         obs_mod.set_active(prev_obs)
         obs.close()
 
 
 def _run(arch: str, obs, *, n_requests, batch_slots, max_seq, prompt_len,
-         new_tokens, scale_down, seed, mesh, metrics):
+         new_tokens, scale_down, seed, mesh, metrics, paged, page_size):
     session = Session(mesh=mesh, obs=obs)
     plan = session.plan(
         arch, batch=batch_slots, seq=max_seq, kind="decode",
@@ -53,7 +54,7 @@ def _run(arch: str, obs, *, n_requests, batch_slots, max_seq, prompt_len,
 
     with jax.set_mesh(session.mesh):
         eng = session.serve(plan, batch_slots=batch_slots, max_seq=max_seq,
-                            seed=seed)
+                            seed=seed, paged=paged, page_size=page_size)
         rng = np.random.default_rng(seed)
         for rid in range(n_requests):
             eng.submit(Request(
@@ -94,13 +95,18 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--scale-down", type=int, default=64)
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache + paged decode kernel "
+                         "(plain-attention archs)")
+    ap.add_argument("--page-size", type=int, default=64)
     ap.add_argument("--metrics", type=str, default=None, metavar="PATH",
                     help="write a JSONL telemetry stream (spans, prefill/"
                          "decode latency histograms) to PATH; default off")
     args = ap.parse_args()
     run(args.arch, n_requests=args.requests, batch_slots=args.batch_slots,
         max_seq=args.max_seq, new_tokens=args.new_tokens,
-        scale_down=args.scale_down, metrics=args.metrics)
+        scale_down=args.scale_down, metrics=args.metrics,
+        paged=args.paged, page_size=args.page_size)
 
 
 if __name__ == "__main__":

@@ -255,12 +255,14 @@ def _run(arch: str, obs, *, steps, batch, seq, scale_down, lr, microbatches,
             # meta carries the full cell coordinates (batch/seq/scale/...)
             # so the calibration fitter can reconstruct the measured cell
             # from the snapshot alone (calibrate.cell_from_meta).
+            from repro.kernels import ops as kops
             obs.snapshot(snap_path, arch=arch, steps=steps,
                          mesh=dict(session.mesh.shape),
                          batch=batch, seq=seq, scale_down=scale_down,
                          microbatches=plan.num_microbatches,
                          pp_schedule=pp_schedule, calibration=calibration,
-                         drift=drift.to_dict())
+                         drift=drift.to_dict(),
+                         fused_kernels=kops.dispatch_report())
             print(f"metrics: {metrics}  snapshot: {snap_path}")
     return losses
 

@@ -259,6 +259,48 @@ def decode_ring(
     return y.astype(x.dtype), k_ring, v_ring
 
 
+def decode_paged(
+    x: jax.Array,                  # (B, 1, D)
+    p: dict,
+    cfg,
+    plan: ParallelPlan,
+    k_pages: jax.Array,            # (P, page, Hkv, hd) physical page pool
+    v_pages: jax.Array,
+    block_table: jax.Array,        # (B, n_pages) int32 logical -> physical
+    pos: jax.Array,                # scalar position of the new token
+    *,
+    policy,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step against a block-paged KV cache.
+
+    The new token scatters into physical page ``block_table[b, pos//page]``
+    at offset ``pos % page``; attention then walks the sequence's pages
+    through :func:`repro.kernels.ops.paged_decode_attention` (the Pallas
+    kernel where it lowers, the gather-based oracle elsewhere).  Every
+    position ``<= pos`` is live (lockstep static-batch decode), so
+    ``seq_lens`` is simply ``pos + 1`` per slot.
+    """
+    from repro.kernels import ops as kops
+
+    B = x.shape[0]
+    page = k_pages.shape[1]
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k, v = _qkv(x, p, cfg, plan, positions, policy)         # (B,1,H,hd)
+
+    phys = block_table[:, pos // page]                         # (B,)
+    off = pos % page
+    k_pages = k_pages.at[phys, off].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v[:, 0].astype(v_pages.dtype))
+
+    seq_lens = jnp.full((B,), pos + 1, jnp.int32)
+    out = kops.paged_decode_attention(
+        q[:, 0].astype(k_pages.dtype), k_pages, v_pages,
+        block_table, seq_lens)                                 # (B,H,hd)
+    y = precision.einsum("bshk,hkd->bsd", out[:, None].astype(q.dtype),
+                         p["wo"], policy=policy)
+    return y.astype(x.dtype), k_pages, v_pages
+
+
 def decode(
     x: jax.Array,                  # (B, 1, D)
     p: dict,

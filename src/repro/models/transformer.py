@@ -406,6 +406,77 @@ class Model:
         return tree_init(jax.random.PRNGKey(0),
                          self.cache_specs(batch, seq_len))
 
+    # ------------------------------------------------------------------
+    # block-paged KV cache (serving; precursor of continuous batching)
+    # ------------------------------------------------------------------
+    def paged_supported(self) -> bool:
+        """Paged decode covers the plain attention families: uniform
+        full-attention layers, no sliding windows, no logit softcap (the
+        ring-cache path already handles local layers better)."""
+        cfg = self.cfg
+        return (cfg.family in ("dense", "moe", "audio", "vlm")
+                and cfg.window is None and cfg.attn_softcap is None)
+
+    def init_paged_cache(self, batch: int, seq_len: int,
+                         page_size: int = 64) -> Dict[str, jax.Array]:
+        """KV cache as a pool of fixed-size pages plus an indices table.
+
+        ``table[b, j]`` is the physical page holding slot b's positions
+        ``[j*page, (j+1)*page)``.  The static-batch engine initializes it
+        slot-major (slot b owns pages ``[b*nb, (b+1)*nb)``), so dense
+        prefill rows reshape straight into a slot's pages; the *read* side
+        (the decode kernel) only ever sees the table, so a continuous-
+        batching allocator can later hand out pages in any order without
+        touching the kernel.
+        """
+        cfg = self.cfg
+        assert self.paged_supported(), (
+            f"paged decode unsupported for family={cfg.family!r} "
+            f"window={cfg.window} softcap={cfg.attn_softcap}")
+        nb = -(-seq_len // page_size)
+        shape = (cfg.n_layers, batch * nb, page_size, cfg.n_kv_heads,
+                 cfg.d_head)
+        table = jnp.arange(batch * nb, dtype=jnp.int32).reshape(batch, nb)
+        return {"k_pages": jnp.zeros(shape, jnp.bfloat16),
+                "v_pages": jnp.zeros(shape, jnp.bfloat16),
+                "table": table}
+
+    def decode_step_paged(self, params, cache, tokens, pos):
+        """One-token serve step against the paged cache.  Same contract as
+        :meth:`decode_step` with ``cache`` from :meth:`init_paged_cache`."""
+        cfg, plan = self.cfg, self.plan
+        x = layers.embed(tokens, params["embed"], scale=cfg.emb_scale)
+        x = x.astype(jnp.bfloat16)
+        table = cache["table"]
+
+        def body(carry, xs):
+            x, kp, vp = carry
+            lp, i = xs
+            kc, vc = kp[i], vp[i]
+            h = layers.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            a, kc, vc = attention.decode_paged(
+                h, lp["attn"], cfg, plan, kc, vc, table, pos,
+                policy=self.policy)
+            x = x + a
+            h = layers.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                f, _ = moe.forward(h, lp["moe"], cfg, plan, self.mesh,
+                                   policy=self.policy)
+            else:
+                f = layers.glu_mlp(
+                    h, lp["mlp"]["gate"], lp["mlp"]["in"],
+                    lp["mlp"]["out"], act=cfg.act, policy=self.policy)
+            kp = jax.lax.dynamic_update_index_in_dim(kp, kc, i, 0)
+            vp = jax.lax.dynamic_update_index_in_dim(vp, vc, i, 0)
+            return (x + f, kp, vp), None
+
+        (x, k_new, v_new), _ = jax.lax.scan(
+            body, (x, cache["k_pages"], cache["v_pages"]),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        cache = dict(cache, k_pages=k_new, v_pages=v_new)
+        logits = self._head(params, x)
+        return logits, cache
+
     def prefill(self, params, tokens, vision_embeds=None,
                 last_only: bool = True):
         """Full-sequence forward returning logits + decode-ready cache.

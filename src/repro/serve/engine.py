@@ -61,11 +61,44 @@ def _make_prefill_fn(model):
     return prefill_slot
 
 
+def _make_prefill_fn_paged(model, page_size: int):
+    """Prefill one slot of a block-paged cache (free function — see
+    :func:`_make_prefill_fn` for why it must not close over the engine).
+
+    Relies on the engine's slot-major page ownership (slot b holds pages
+    ``[b*nb, (b+1)*nb)`` — the ``table`` built by ``init_paged_cache``):
+    the dense (L, 1, S, ...) prefill rows pad to a whole number of pages
+    and reshape directly into the slot's page range.  Decode reads pages
+    only through the table, so this write-side shortcut never leaks into
+    the kernel's contract.
+    """
+
+    def prefill_slot(params, cache, tokens, slot):
+        logits, c1 = model.prefill(params, tokens)
+
+        def write(pages, one):
+            L, P, page, Hkv, hd = pages.shape
+            nb = P // cache["table"].shape[0]
+            S = one.shape[2]
+            one = jnp.pad(one[:, 0], ((0, 0), (0, nb * page - S),
+                                      (0, 0), (0, 0)))
+            one = one.reshape(L, nb, page, Hkv, hd).astype(pages.dtype)
+            return jax.lax.dynamic_update_slice_in_dim(
+                pages, one, slot * nb, axis=1)
+
+        cache = dict(cache,
+                     k_pages=write(cache["k_pages"], c1["k"]),
+                     v_pages=write(cache["v_pages"], c1["v"]))
+        return logits[:, -1, :], cache
+
+    return prefill_slot
+
+
 class Engine:
     def __init__(self, model, params, batch_slots: int, max_seq: int,
                  temperature: float = 0.0, seed: int = 0,
                  opcache=None, registry=None, cache_key: str = None,
-                 obs=None):
+                 obs=None, paged: bool = False, page_size: int = 64):
         # prefill/decode latency histograms + token counters; the NULL
         # default keeps the tick loop free of timing syscalls and
         # block_until_ready sync points when telemetry is off.
@@ -77,7 +110,16 @@ class Engine:
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
 
-        self.cache = model.init_cache(batch_slots, max_seq)
+        # paged: the KV cache is a pool of fixed-size pages addressed
+        # through an indices table — decode attends via the paged kernel
+        # instead of scanning the dense (B, T) cache.
+        self.paged = paged
+        self.page_size = page_size
+        if paged:
+            self.cache = model.init_paged_cache(batch_slots, max_seq,
+                                                page_size)
+        else:
+            self.cache = model.init_cache(batch_slots, max_seq)
         self.pos = np.zeros(batch_slots, np.int32)
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
@@ -93,13 +135,20 @@ class Engine:
             key = opcache.key_for(
                 op, (), mesh_shape=(tuple(mesh.shape.items())
                                     if hasattr(mesh, "shape") else ()),
-                model=id(model), B=batch_slots, T=max_seq)
+                model=id(model), B=batch_slots, T=max_seq,
+                paged=paged, page=page_size)
             return opcache.get_or_build(key, op, build)
 
-        self._decode = _jit("serve_decode", lambda: jax.jit(
-            model.decode_step, donate_argnums=(1,)))
-        self._prefill_one = _jit("serve_prefill", lambda: jax.jit(
-            _make_prefill_fn(model)))
+        if paged:
+            self._decode = _jit("serve_decode_paged", lambda: jax.jit(
+                model.decode_step_paged, donate_argnums=(1,)))
+            self._prefill_one = _jit("serve_prefill_paged", lambda: jax.jit(
+                _make_prefill_fn_paged(model, page_size)))
+        else:
+            self._decode = _jit("serve_decode", lambda: jax.jit(
+                model.decode_step, donate_argnums=(1,)))
+            self._prefill_one = _jit("serve_prefill", lambda: jax.jit(
+                _make_prefill_fn(model)))
 
         # Optional write-through to a Session's persistent-state registry:
         # the fixed-size cache is allocated ONCE (bytes never change), so

@@ -46,6 +46,8 @@ SUITES: Dict[str, Tuple[str, int, str]] = {
         ("REPRO_MEM_FAKE_DEVICES", 8, "test_memory_model_suite_subprocess"),
     "test_api_session.py":
         ("REPRO_API_FAKE_DEVICES", 8, "test_api_session_subprocess"),
+    "test_fused_kernels.py":
+        ("REPRO_FUSED_CHILD", 4, "test_fused_kernels_subprocess"),
 }
 
 _JOIN_TO_SUITE = {join: base for base, (_v, _n, join) in SUITES.items()}
@@ -71,9 +73,13 @@ _outfiles: Dict[str, str] = {}
 #: it; unset -> auto.  Auto DISABLES the cache on the CPU backend below
 #: jaxlib 0.5: deserialized XLA:CPU executables are broken there
 #: (jaxlib 0.4.36 segfaults/heap-corrupts on the first cache hit of a
-#: donated train step — reproducible with any two identical jits), so the
-#: wiring stays dormant on this container and lights up unchanged on real
-#: accelerators or a newer pin.
+#: donated train step).  Re-tested 2026-08 on the pinned jaxlib 0.4.36:
+#: minimal repros (two identical jits, even a donated shard_map train
+#: step) now pass, but the real Session train step still segfaults
+#: deterministically — REPRO_XLA_CACHE_DIR=<dir> on the
+#: test_api_session.py child crashes inside the deserialized executable
+#: on both the populate and the hit run.  The gate stands; the wiring
+#: lights up unchanged on real accelerators or a newer pin.
 _XLA_CACHE_BASE = os.environ.get(
     "REPRO_XLA_CACHE_DIR",
     os.path.join(_TESTS_DIR, "..", ".cache", "xla"))
