@@ -16,6 +16,10 @@
                 re-measure; asserts drift shrinks to n_flagged == 0 and
                 commits experiments/calibration.json (8 fake devices)
   kernels       Pallas kernels (interpret) vs oracles
+  serve_saturation  repro.serve continuous batching: offered-load sweep
+                (req/s, TTFT, per-token p50/p99, pool utilization,
+                preemptions, structured refusals) ->
+                experiments/serve_saturation.json
   roofline      §Roofline summary from the dry-run artifacts (if present)
 
 Prints ``name,us_per_call,derived`` CSV.  Multi-device sections re-exec in
@@ -38,7 +42,8 @@ MULTIDEV = {"gemm": "benchmarks.gemm_layouts",
             "table1": "benchmarks.table1"}
 LOCAL = {"precision": "benchmarks.precision_bench",
          "pipeline": "benchmarks.pipeline_bench",
-         "kernels": "benchmarks.kernels_bench"}
+         "kernels": "benchmarks.kernels_bench",
+         "serve_saturation": "benchmarks.serve_saturation_bench"}
 
 
 def _run_child(module: str) -> int:

@@ -457,21 +457,34 @@ class Session:
     def serve(self, plan: ExecutablePlan, *, batch_slots: int,
               max_seq: int, temperature: float = 0.0, seed: int = 0,
               name: str = "serve", paged: bool = False,
-              page_size: int = 64):
-        """Build the batched engine on the session's persistent state.
+              page_size: int = 64, scheduler: str = "static",
+              num_pages: Optional[int] = None, prefill_chunk: int = 32,
+              policy: str = "fifo"):
+        """Build a serving engine on the session's persistent state.
 
         Params live in the state registry under ``{name}/params`` (reused
         across engines — restarting a server never re-initializes or
-        re-uploads weights) and the engine's fixed-size KV cache is
-        registered under ``{name}/kv_cache`` so its footprint is
-        accounted; the engine's jitted prefill/decode steps come from the
-        session's compiled-artifact cache.
+        re-uploads weights); the engine's jitted prefill/decode steps come
+        from the session's compiled-artifact cache.
 
-        ``paged=True`` allocates the cache as a pool of ``page_size``
-        pages behind an indices table and decodes through the paged
-        attention kernel (plain-attention families only).
+        ``scheduler="static"`` (default) builds the fixed-slot
+        :class:`~repro.serve.Engine` with its KV cache registered under
+        ``{name}/kv_cache``; ``paged=True`` allocates that cache as a
+        pool of ``page_size`` pages behind an indices table and decodes
+        through the paged attention kernel (plain-attention families
+        only).
+
+        ``scheduler="continuous"`` builds the continuous-batching
+        :class:`~repro.serve.ContinuousEngine`: a block-paged KV pool
+        registered under ``{name}/kv_pool`` (footprint-accounted — an
+        over-budget pool is refused with a :class:`PlanMemoryError`),
+        per-tick admission governed by the block manager, ``prefill_chunk``-
+        token prefill chunks interleaved with decode, and preempt-and-
+        requeue on pool exhaustion.  ``num_pages`` overrides the pool
+        size (default: full static capacity clamped to the budget);
+        ``policy`` is the queue order (``fifo`` | ``priority``).
         """
-        from repro.serve import Engine
+        from repro.serve import ContinuousEngine, Engine
 
         model = plan.model
         pname = f"{name}/params"
@@ -494,11 +507,22 @@ class Session:
             params = model.init(jax.random.PRNGKey(seed))
             params = jax.device_put(params, model.param_shardings())
             self.state.put(pname, params, kind="params")
+        if scheduler == "continuous":
+            return ContinuousEngine(
+                model, params, batch_slots, max_seq,
+                temperature=temperature, seed=seed, opcache=self.opcache,
+                registry=self.state, cache_key=f"{name}/kv_pool",
+                obs=self.obs, page_size=page_size, num_pages=num_pages,
+                prefill_chunk=prefill_chunk, policy=policy)
+        if scheduler != "static":
+            raise ValueError(f"scheduler={scheduler!r}; expected "
+                             "static | continuous")
         return Engine(model, params, batch_slots, max_seq,
                       temperature=temperature, seed=seed,
                       opcache=self.opcache, registry=self.state,
                       cache_key=f"{name}/kv_cache", obs=self.obs,
-                      paged=paged, page_size=page_size)
+                      paged=paged, page_size=page_size,
+                      prefill_chunk=prefill_chunk)
 
     # ------------------------------------------------------------------
     # the linalg surface

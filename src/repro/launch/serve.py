@@ -5,6 +5,11 @@ kind) -> ``Session.serve`` (batched engine on the session's persistent
 params + KV cache, jitted steps in the session's compiled-artifact
 cache), feeds synthetic prompts, reports tokens/sec — the inference
 counterpart of launch/train.py.
+
+``--scheduler continuous`` runs the continuous-batching engine (paged KV
+block pool + budget-governed admission, chunked prefill, preempt-and-
+requeue); ``--scheduler static`` (default) runs the fixed-slot engine,
+optionally ``--paged``.
 """
 
 from __future__ import annotations
@@ -26,7 +31,8 @@ def run(arch: str, *, n_requests: int = 8, batch_slots: int = 4,
         max_seq: int = 128, prompt_len: int = 16, new_tokens: int = 16,
         scale_down: int = 64, seed: int = 0, mesh=None,
         metrics: Optional[str] = None, paged: bool = False,
-        page_size: int = 64):
+        page_size: int = 64, scheduler: str = "static",
+        prefill_chunk: int = 32, num_pages: Optional[int] = None):
     # --metrics: stream plan/lower spans + per-request prefill/decode
     # latency histograms as JSONL; off -> NULL obs, output unchanged.
     obs = obs_mod.Obs(jsonl=metrics, name=f"serve/{arch}") if metrics \
@@ -37,14 +43,17 @@ def run(arch: str, *, n_requests: int = 8, batch_slots: int = 4,
                     batch_slots=batch_slots, max_seq=max_seq,
                     prompt_len=prompt_len, new_tokens=new_tokens,
                     scale_down=scale_down, seed=seed, mesh=mesh,
-                    metrics=metrics, paged=paged, page_size=page_size)
+                    metrics=metrics, paged=paged, page_size=page_size,
+                    scheduler=scheduler, prefill_chunk=prefill_chunk,
+                    num_pages=num_pages)
     finally:
         obs_mod.set_active(prev_obs)
         obs.close()
 
 
 def _run(arch: str, obs, *, n_requests, batch_slots, max_seq, prompt_len,
-         new_tokens, scale_down, seed, mesh, metrics, paged, page_size):
+         new_tokens, scale_down, seed, mesh, metrics, paged, page_size,
+         scheduler, prefill_chunk, num_pages):
     session = Session(mesh=mesh, obs=obs)
     plan = session.plan(
         arch, batch=batch_slots, seq=max_seq, kind="decode",
@@ -54,7 +63,10 @@ def _run(arch: str, obs, *, n_requests, batch_slots, max_seq, prompt_len,
 
     with jax.set_mesh(session.mesh):
         eng = session.serve(plan, batch_slots=batch_slots, max_seq=max_seq,
-                            seed=seed, paged=paged, page_size=page_size)
+                            seed=seed, paged=paged, page_size=page_size,
+                            scheduler=scheduler,
+                            prefill_chunk=prefill_chunk,
+                            num_pages=num_pages)
         rng = np.random.default_rng(seed)
         for rid in range(n_requests):
             eng.submit(Request(
@@ -70,19 +82,31 @@ def _run(arch: str, obs, *, n_requests, batch_slots, max_seq, prompt_len,
             total += eng.step()
             ticks += 1
         dt = time.perf_counter() - t0
-    print(f"{arch}: {n_requests} requests, {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s, {ticks} ticks)")
+    finished = len(eng.finished)
+    print(f"{arch}: {n_requests} requests ({finished} finished), {total} "
+          f"tokens in {dt:.2f}s ({total / dt:.1f} tok/s, {ticks} ticks)")
     if obs.enabled:
         session.publish_metrics()
-        for name in ("serve.prefill_s", "serve.decode_s"):
+        for name in ("serve.prefill_s", "serve.decode_s", "serve.ttft_s",
+                     "serve.queue_wait_s"):
             s = obs.histogram(name).summary()
             if s.get("count"):
                 print(f"{name}: n={s['count']} p50={s['p50'] * 1e3:.1f}ms "
                       f"p99={s['p99'] * 1e3:.1f}ms")
         snap = os.path.join(os.path.dirname(os.path.abspath(metrics)) or ".",
                             "BENCH_serve_metrics.json")
+        serve_meta = {
+            "scheduler": scheduler, "paged": bool(paged or
+                                                  scheduler == "continuous"),
+            "page_size": page_size, "prefill_chunk": prefill_chunk,
+            "preemptions": obs.counter("serve.preemptions").value,
+            "refusals": len(getattr(eng, "refused", ())),
+        }
+        if hasattr(eng, "blocks"):
+            serve_meta["pool_pages"] = eng.blocks.num_pages
+            serve_meta["pool_pages_used"] = eng.blocks.used_pages
         obs.snapshot(snap, arch=arch, requests=n_requests,
-                     tokens=total, tok_per_s=total / dt)
+                     tokens=total, tok_per_s=total / dt, serve=serve_meta)
         print(f"metrics: {metrics}  snapshot: {snap}")
     return total, dt
 
@@ -95,10 +119,19 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--scale-down", type=int, default=64)
+    ap.add_argument("--scheduler", choices=("static", "continuous"),
+                    default="static",
+                    help="static fixed-slot engine (default) or "
+                         "continuous batching over the paged block pool")
     ap.add_argument("--paged", action="store_true",
-                    help="block-paged KV cache + paged decode kernel "
-                         "(plain-attention archs)")
+                    help="block-paged KV cache + paged decode kernel for "
+                         "the static engine (plain-attention archs)")
     ap.add_argument("--page-size", type=int, default=64)
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prefill chunk tokens (paged/continuous paths)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="continuous pool pages incl. the NULL page "
+                         "(default: full static capacity, budget-clamped)")
     ap.add_argument("--metrics", type=str, default=None, metavar="PATH",
                     help="write a JSONL telemetry stream (spans, prefill/"
                          "decode latency histograms) to PATH; default off")
@@ -106,7 +139,9 @@ def main():
     run(args.arch, n_requests=args.requests, batch_slots=args.batch_slots,
         max_seq=args.max_seq, new_tokens=args.new_tokens,
         scale_down=args.scale_down, metrics=args.metrics,
-        paged=args.paged, page_size=args.page_size)
+        paged=args.paged, page_size=args.page_size,
+        scheduler=args.scheduler, prefill_chunk=args.prefill_chunk,
+        num_pages=args.num_pages)
 
 
 if __name__ == "__main__":

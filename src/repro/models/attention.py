@@ -242,15 +242,24 @@ def decode_ring(
     policy,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One decode step for a LOCAL (sliding-window) layer: O(window)
-    cache instead of O(seq) — gemma3's 5:1 pattern is built for this."""
-    positions = pos[None] if pos.ndim == 0 else pos
+    cache instead of O(seq) — gemma3's 5:1 pattern is built for this.
+
+    ``pos`` may be scalar (lockstep batch) or per-slot ``(B,)`` (ragged
+    serving batches); the per-slot path scatters each row's token into
+    its own ring slot."""
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]
     q, k, v = _qkv(x, p, cfg, plan, positions, policy)
     W = k_ring.shape[1]
     slot = jnp.mod(pos, W)
-    k_ring = jax.lax.dynamic_update_slice_in_dim(
-        k_ring, k.astype(k_ring.dtype), slot, axis=1)
-    v_ring = jax.lax.dynamic_update_slice_in_dim(
-        v_ring, v.astype(v_ring.dtype), slot, axis=1)
+    if pos.ndim == 0:
+        k_ring = jax.lax.dynamic_update_slice_in_dim(
+            k_ring, k.astype(k_ring.dtype), slot, axis=1)
+        v_ring = jax.lax.dynamic_update_slice_in_dim(
+            v_ring, v.astype(v_ring.dtype), slot, axis=1)
+    else:
+        b_idx = jnp.arange(x.shape[0])
+        k_ring = k_ring.at[b_idx, slot].set(k[:, 0].astype(k_ring.dtype))
+        v_ring = v_ring.at[b_idx, slot].set(v[:, 0].astype(v_ring.dtype))
     out = layers.decode_attention_ring(
         q.transpose(0, 2, 1, 3), k_ring, v_ring, pos,
         softcap=cfg.attn_softcap)
@@ -267,7 +276,7 @@ def decode_paged(
     k_pages: jax.Array,            # (P, page, Hkv, hd) physical page pool
     v_pages: jax.Array,
     block_table: jax.Array,        # (B, n_pages) int32 logical -> physical
-    pos: jax.Array,                # scalar position of the new token
+    pos: jax.Array,                # scalar or (B,) position of the new token
     *,
     policy,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -276,28 +285,84 @@ def decode_paged(
     The new token scatters into physical page ``block_table[b, pos//page]``
     at offset ``pos % page``; attention then walks the sequence's pages
     through :func:`repro.kernels.ops.paged_decode_attention` (the Pallas
-    kernel where it lowers, the gather-based oracle elsewhere).  Every
-    position ``<= pos`` is live (lockstep static-batch decode), so
+    kernel where it lowers, the gather-based oracle elsewhere).  ``pos``
+    may be scalar (lockstep static-batch decode) or per-slot ``(B,)``
+    (continuous batching); every position ``<= pos[b]`` is live, so
     ``seq_lens`` is simply ``pos + 1`` per slot.
     """
     from repro.kernels import ops as kops
 
     B = x.shape[0]
     page = k_pages.shape[1]
-    positions = pos[None] if pos.ndim == 0 else pos
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]
     q, k, v = _qkv(x, p, cfg, plan, positions, policy)         # (B,1,H,hd)
 
-    phys = block_table[:, pos // page]                         # (B,)
-    off = pos % page
+    pos_b = jnp.broadcast_to(pos, (B,))
+    phys = block_table[jnp.arange(B), pos_b // page]           # (B,)
+    off = pos_b % page
     k_pages = k_pages.at[phys, off].set(k[:, 0].astype(k_pages.dtype))
     v_pages = v_pages.at[phys, off].set(v[:, 0].astype(v_pages.dtype))
 
-    seq_lens = jnp.full((B,), pos + 1, jnp.int32)
+    seq_lens = (pos_b + 1).astype(jnp.int32)
     out = kops.paged_decode_attention(
         q[:, 0].astype(k_pages.dtype), k_pages, v_pages,
         block_table, seq_lens)                                 # (B,H,hd)
     y = precision.einsum("bshk,hkd->bsd", out[:, None].astype(q.dtype),
                          p["wo"], policy=policy)
+    return y.astype(x.dtype), k_pages, v_pages
+
+
+def prefill_chunk_paged(
+    x: jax.Array,                  # (1, C, D) one prompt chunk, end-padded
+    p: dict,
+    cfg,
+    plan: ParallelPlan,
+    k_pages: jax.Array,            # (P, page, Hkv, hd) physical page pool
+    v_pages: jax.Array,
+    table_row: jax.Array,          # (n_pages,) int32 logical -> physical
+    start: jax.Array,              # scalar: absolute position of chunk[0]
+    *,
+    policy,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One fixed-size prefill chunk for ONE sequence against the paged pool.
+
+    Scatters the chunk's K/V into the sequence's pages (through the block
+    table, so the allocator may hand out pages in any order), gathers the
+    row back in LOGICAL page order, and runs the flash body with
+    ``q_offset=start``.  Correctness of the padding/garbage regions:
+
+    - end-padding positions ``>= start + n_real`` are beyond every real
+      query's causal horizon, so their scores are masked (their K/V lands
+      either in the row's own later pages — overwritten by the next chunk
+      or by decode before any query attends that position — or in the
+      NULL page when the tail page is unallocated);
+    - the gather is by logical order, so attention is invariant to the
+      physical page permutation — the static slot-major table and the
+      continuous free-list allocator produce bit-identical outputs.
+    """
+    C = x.shape[1]
+    page = k_pages.shape[1]
+    positions = start + jnp.arange(C)
+    q, k, v = _qkv(x, p, cfg, plan, positions, policy)         # (1,C,H,hd)
+
+    page_idx = positions // page
+    phys = table_row[page_idx]                                 # (C,)
+    off = positions % page
+    k_pages = k_pages.at[phys, off].set(k[0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v[0].astype(v_pages.dtype))
+
+    n_pages = table_row.shape[0]
+    k_row = k_pages[table_row].reshape(1, n_pages * page, *k_pages.shape[2:])
+    v_row = v_pages[table_row].reshape(1, n_pages * page, *v_pages.shape[2:])
+    out = layers.flash_attention_jnp(
+        q.transpose(0, 2, 1, 3), k_row.transpose(0, 2, 1, 3),
+        v_row.transpose(0, 2, 1, 3),
+        causal=True, softcap=cfg.attn_softcap, q_offset=start,
+        bq=min(q_chunk, C), bkv=kv_chunk,
+    ).transpose(0, 2, 1, 3)                                    # (1,C,H,hd)
+    y = precision.einsum("bshk,hkd->bsd", out, p["wo"], policy=policy)
     return y.astype(x.dtype), k_pages, v_pages
 
 
@@ -308,19 +373,27 @@ def decode(
     plan: ParallelPlan,
     k_cache: jax.Array,            # (B, T, Hkv, hd) seq-sharded
     v_cache: jax.Array,
-    pos: jax.Array,                # scalar position of the new token
+    pos: jax.Array,                # scalar or (B,) position of the new token
     *,
     policy,
     window: Optional[Union[int, jax.Array]] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One decode step: update cache at ``pos``, flash-decode attention."""
-    positions = pos[None] if pos.ndim == 0 else pos
+    """One decode step: update cache at ``pos``, flash-decode attention.
+
+    Per-slot ``(B,)`` positions scatter each row's token into its own
+    cache slot — the ragged-batch serving path (no lockstep max-pos)."""
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]
     q, k, v = _qkv(x, p, cfg, plan, positions, policy)         # (B,1,H,hd)
 
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        k_cache, k.astype(k_cache.dtype), pos, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    if pos.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    else:
+        b_idx = jnp.arange(x.shape[0])
+        k_cache = k_cache.at[b_idx, pos].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[b_idx, pos].set(v[:, 0].astype(v_cache.dtype))
 
     out = layers.decode_attention(
         q.transpose(0, 2, 1, 3), k_cache, v_cache, pos,

@@ -141,14 +141,18 @@ def decode_attention(
     q: jax.Array,                 # (B, Hq, 1, D) one new token
     k: jax.Array,                 # (B, T, Hkv, D) cache (seq-major!)
     v: jax.Array,
-    pos: jax.Array,               # scalar: index of the new token
+    pos: jax.Array,               # scalar OR (B,): index of the new token
     *,
     window: Optional[Union[int, jax.Array]] = None,
     softcap: Optional[float] = None,
     scale: Optional[float] = None,
 ) -> jax.Array:
     """Flash-decoding layout: cache sharded on T; GSPMD reduces the softmax
-    stats (tiny) and the output psum — see DESIGN §4."""
+    stats (tiny) and the output psum — see DESIGN §4.
+
+    ``pos`` may be per-slot ``(B,)``: the serving engines decode ragged
+    batches where every slot sits at its own position (no lockstep
+    ``max(pos)`` — see ``serve/engine.py``)."""
     B, Hq, _, D = q.shape
     _, T, Hkv, _ = k.shape
     g = Hq // Hkv
@@ -158,10 +162,16 @@ def decode_attention(
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
     kpos = jnp.arange(T)
-    mask = kpos <= pos
-    if window is not None:
-        mask &= kpos > pos - window
-    s = jnp.where(mask[None, None, None, :], s, NEG)
+    if pos.ndim == 0:
+        mask = kpos <= pos
+        if window is not None:
+            mask &= kpos > pos - window
+        s = jnp.where(mask[None, None, None, :], s, NEG)
+    else:                          # per-slot positions: (B, T) mask
+        mask = kpos[None, :] <= pos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > pos[:, None] - window
+        s = jnp.where(mask[:, None, None, :], s, NEG)
     p = jax.nn.softmax(s, axis=-1)
     out = precision.einsum("bkgt,btkd->bkgd", p, v, policy=precision.FULL)
     return out.reshape(B, Hq, 1, D).astype(q.dtype)
@@ -196,8 +206,12 @@ def decode_attention_ring(
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
     j = jnp.arange(W)
-    abs_pos = pos - jnp.mod(pos - j, W)
-    s = jnp.where((abs_pos >= 0)[None, None, None, :], s, NEG)
+    if pos.ndim == 0:
+        abs_pos = pos - jnp.mod(pos - j, W)
+        s = jnp.where((abs_pos >= 0)[None, None, None, :], s, NEG)
+    else:                          # per-slot positions: (B, W) mask
+        abs_pos = pos[:, None] - jnp.mod(pos[:, None] - j[None, :], W)
+        s = jnp.where((abs_pos >= 0)[:, None, None, :], s, NEG)
     p = jax.nn.softmax(s, axis=-1)
     out = precision.einsum("bkgw,bwkd->bkgd", p, v, policy=precision.FULL)
     return out.reshape(B, Hq, 1, D).astype(q.dtype)

@@ -441,6 +441,70 @@ class Model:
                 "v_pages": jnp.zeros(shape, jnp.bfloat16),
                 "table": table}
 
+    def init_paged_pool(self, num_pages: int,
+                        page_size: int = 64) -> Dict[str, jax.Array]:
+        """Bare physical page pool for a continuous-batching allocator.
+
+        Unlike :meth:`init_paged_cache` there is no baked-in table: the
+        block manager (``repro.serve.blocks``) owns the logical->physical
+        mapping and hands the engine per-tick tables.  Page 0 is reserved
+        as the NULL page by convention — inactive slots and unallocated
+        table-row tails point there, so stray writes (idle-slot decode,
+        prefill end-padding) can never corrupt a live sequence.
+        """
+        cfg = self.cfg
+        assert self.paged_supported(), (
+            f"paged decode unsupported for family={cfg.family!r} "
+            f"window={cfg.window} softcap={cfg.attn_softcap}")
+        shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads,
+                 cfg.d_head)
+        return {"k_pages": jnp.zeros(shape, jnp.bfloat16),
+                "v_pages": jnp.zeros(shape, jnp.bfloat16)}
+
+    def prefill_chunk_paged(self, params, cache, tokens, table_row, start):
+        """One fixed-size prefill chunk for ONE sequence (B=1 forward).
+
+        ``tokens``: (1, C) end-padded chunk; ``table_row``: (n_pages,)
+        logical->physical for the sequence; ``start``: absolute position
+        of ``tokens[0, 0]``.  Returns per-position logits (1, C, V) — the
+        caller samples at the last REAL position of the final chunk — and
+        the cache with updated pages.  Shared by the static paged engine
+        and the continuous engine so their prefill numerics are
+        bit-identical (see ``attention.prefill_chunk_paged``).
+        """
+        cfg, plan = self.cfg, self.plan
+        x = layers.embed(tokens, params["embed"], scale=cfg.emb_scale)
+        x = x.astype(jnp.bfloat16)
+
+        def body(carry, xs):
+            x, kp, vp = carry
+            lp, i = xs
+            kc, vc = kp[i], vp[i]
+            h = layers.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            a, kc, vc = attention.prefill_chunk_paged(
+                h, lp["attn"], cfg, plan, kc, vc, table_row, start,
+                policy=self.policy, q_chunk=self.q_chunk,
+                kv_chunk=self.kv_chunk)
+            x = x + a
+            h = layers.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                f, _ = moe.forward(h, lp["moe"], cfg, plan, self.mesh,
+                                   policy=self.policy)
+            else:
+                f = layers.glu_mlp(
+                    h, lp["mlp"]["gate"], lp["mlp"]["in"],
+                    lp["mlp"]["out"], act=cfg.act, policy=self.policy)
+            kp = jax.lax.dynamic_update_index_in_dim(kp, kc, i, 0)
+            vp = jax.lax.dynamic_update_index_in_dim(vp, vc, i, 0)
+            return (x + f, kp, vp), None
+
+        (x, k_new, v_new), _ = jax.lax.scan(
+            body, (x, cache["k_pages"], cache["v_pages"]),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        cache = dict(cache, k_pages=k_new, v_pages=v_new)
+        logits = self._head(params, x)
+        return logits, cache
+
     def decode_step_paged(self, params, cache, tokens, pos):
         """One-token serve step against the paged cache.  Same contract as
         :meth:`decode_step` with ``cache`` from :meth:`init_paged_cache`."""

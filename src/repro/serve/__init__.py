@@ -1,3 +1,9 @@
-from .engine import Engine, Request
+from .blocks import (AdmissionRefusal, BlockManager, NULL_PAGE,
+                     PoolExhausted, kv_bytes_per_block,
+                     pool_pages_for_budget)
+from .engine import ContinuousEngine, Engine
+from .scheduler import Request, Scheduler
 
-__all__ = ["Engine", "Request"]
+__all__ = ["Engine", "ContinuousEngine", "Request", "Scheduler",
+           "BlockManager", "AdmissionRefusal", "PoolExhausted",
+           "NULL_PAGE", "kv_bytes_per_block", "pool_pages_for_budget"]

@@ -1,0 +1,124 @@
+"""repro.serve.scheduler — budget-governed request scheduling.
+
+The per-tick policy half of continuous batching: the
+:class:`~repro.serve.blocks.BlockManager` says what fits, this module
+says who goes next.  FIFO by default, optional static priorities;
+admission is gated on the pool holding ``prompt + max_new_tokens`` (the
+same conservative bound the footprint model uses), long prefills are
+chunked by the engine and interleaved with decode ticks, and pool
+exhaustion during decode growth preempts the YOUNGEST admitted sequence
+— it has the least sunk prefill work — which requeues at the FRONT so
+it is first to restart.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, List, Optional, Sequence
+
+import numpy as np
+
+from .blocks import AdmissionRefusal, BlockManager
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S_prompt,) int32
+    max_new_tokens: int = 32
+    priority: int = 0             # higher admits first (priority policy)
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    # lifecycle timestamps (time.perf_counter seconds) + bookkeeping
+    submit_t: Optional[float] = None
+    admit_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    n_preempted: int = 0
+    refusal: Optional[AdmissionRefusal] = None
+    prefill_pos: int = 0          # prompt tokens already prefilled
+
+
+class Scheduler:
+    """Queue + admission/preemption policy over a :class:`BlockManager`.
+
+    ``policy="fifo"`` scans the queue in arrival order and admits the
+    first request whose footprint fits the free pool; ``"priority"``
+    scans in (priority desc, arrival) order.  Requests that can NEVER
+    fit (pool capacity or the engine's position window) are refused at
+    submit time with the block manager's structured reason and land in
+    ``refused`` instead of the queue.
+    """
+
+    def __init__(self, blocks: BlockManager, *, policy: str = "fifo"):
+        if policy not in ("fifo", "priority"):
+            raise ValueError(f"scheduler policy {policy!r}; expected "
+                             "fifo | priority")
+        self.blocks = blocks
+        self.policy = policy
+        self.queue: Deque[Request] = deque()
+        self.refused: List[Request] = []
+
+    # -- intake -------------------------------------------------------------
+    def submit(self, req: Request) -> Optional[AdmissionRefusal]:
+        """Queue a request, or refuse it outright when it can never fit.
+        Returns the structured refusal (also stored on the request) or
+        None when queued."""
+        if req.submit_t is None:
+            req.submit_t = time.perf_counter()
+        refusal = self.blocks.check_admission(
+            req.rid, len(req.prompt), req.max_new_tokens)
+        if refusal is not None:
+            req.refusal = refusal
+            req.done = True
+            self.refused.append(req)
+            return refusal
+        self.queue.append(req)
+        return None
+
+    # -- admission ----------------------------------------------------------
+    def _scan_order(self) -> Sequence[Request]:
+        if self.policy == "priority":
+            # stable sort: ties keep arrival order
+            return sorted(self.queue, key=lambda r: -r.priority)
+        return self.queue
+
+    def next_admission(self) -> Optional[Request]:
+        """Pop the next request the pool can hold end-to-end, or None.
+        FIFO deliberately allows small requests to bypass a stuck head —
+        the head is not starved because pages only ever free up (retire/
+        preempt), at which point arrival order wins again."""
+        for req in self._scan_order():
+            if self.blocks.can_admit(len(req.prompt), req.max_new_tokens):
+                self.queue.remove(req)
+                return req
+        return None
+
+    # -- preemption ---------------------------------------------------------
+    def victim(self, active: Sequence[Optional[Request]]
+               ) -> Optional[Request]:
+        """The youngest admitted sequence (latest ``admit_t``): least
+        sunk prefill/decode work to throw away."""
+        live = [r for r in active if r is not None]
+        if not live:
+            return None
+        return max(live, key=lambda r: (r.admit_t or 0.0))
+
+    def requeue_preempted(self, req: Request) -> None:
+        """Full-restart preemption: drop generated state, requeue FRONT."""
+        req.n_preempted += 1
+        req.out.clear()
+        req.prefill_pos = 0
+        req.admit_t = None
+        req.first_token_t = None
+        self.queue.appendleft(req)
+
+    # -- retirement ---------------------------------------------------------
+    def retire(self, req: Request) -> None:
+        req.done = True
+        req.finish_t = time.perf_counter()
+
+    def __len__(self) -> int:
+        return len(self.queue)
