@@ -20,6 +20,10 @@
                 (req/s, TTFT, per-token p50/p99, pool utilization,
                 preemptions, structured refusals) ->
                 experiments/serve_saturation.json
+  fault_drill   repro.faults + train/resilience: every injectable fault
+                injected once into train + serve runs; FAILS unless all
+                are recovered -> experiments/fault_drill.json
+                (8 fake devices)
   roofline      §Roofline summary from the dry-run artifacts (if present)
 
 Prints ``name,us_per_call,derived`` CSV.  Multi-device sections re-exec in
@@ -39,6 +43,7 @@ MULTIDEV = {"gemm": "benchmarks.gemm_layouts",
             "memory_model": "benchmarks.memory_model_bench",
             "step_metrics": "benchmarks.step_metrics_bench",
             "calibrate": "benchmarks.calibrate_bench",
+            "fault_drill": "benchmarks.fault_drill_bench",
             "table1": "benchmarks.table1"}
 LOCAL = {"precision": "benchmarks.precision_bench",
          "pipeline": "benchmarks.pipeline_bench",

@@ -118,6 +118,11 @@ class Session:
         # disabled NULL singleton — with metrics off every instrumented
         # site is a no-op and numerics/output are unchanged.
         self.obs = obs if obs is not None else obs_mod.NULL
+        #: did the most recent :meth:`step` trigger a compile (first call
+        #: or a jit re-specialization)?  Step-time consumers — the
+        #: straggler watchdog above all — must not fold multi-second
+        #: compile steps into a steady-state latency distribution.
+        self.last_step_compiled = False
 
     # ------------------------------------------------------------------
     # planning
@@ -318,22 +323,23 @@ class Session:
         """
         warm = self._step_key(plan, jit=True) in self.opcache
         fn = self.train_step(plan)
-        n_compiled0 = None
-        if self.obs.enabled:
-            try:
-                n_compiled0 = fn._cache_size()
-            except Exception:
-                n_compiled0 = None
+        try:
+            n_compiled0 = fn._cache_size()
+        except Exception:
+            n_compiled0 = None
         with self.obs.span("step" if warm else "step_warmup",
                            path=plan.path) as sp:
             new_state, metrics = fn(self.state.get(name), batch)
             sp.block((new_state, metrics))
-            if warm and n_compiled0 is not None:
+            compiled = not warm
+            if n_compiled0 is not None:
                 try:
-                    if fn._cache_size() > n_compiled0:
-                        sp.name = "step_warmup"
+                    compiled = compiled or fn._cache_size() > n_compiled0
                 except Exception:
                     pass
+            if warm and compiled and self.obs.enabled:
+                sp.name = "step_warmup"
+        self.last_step_compiled = compiled
         self.state.update(name, new_state)
         if self.obs.enabled:
             self.publish_metrics()
@@ -360,6 +366,40 @@ class Session:
 
     def evict(self, name: str):
         return self.state.evict(name)
+
+    # ------------------------------------------------------------------
+    # resilience: host snapshots + donation-safe rollback
+    # ------------------------------------------------------------------
+    def snapshot_state(self, name: str = "train_state"):
+        """Host-memory copy of a persistent pytree (plain numpy leaves).
+
+        The rollback point :class:`repro.train.resilience.ResilientStepLoop`
+        keeps between checkpoints: taking it BEFORE a donated step is safe
+        (device_get copies out before the buffers are donated), and
+        restoring it un-does a step whose committed update went non-finite.
+        The fleet-scale analogue is dMath's async host replication; at
+        drill scale a synchronous device_get is cheap.
+        """
+        import numpy as np
+        return jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                            self.state.get(name))
+
+    def restore_state(self, snapshot, *, shardings=None,
+                      name: str = "train_state"):
+        """Place a host snapshot back on the mesh and refresh the registry
+        entry (donation-safe: the poisoned buffers it replaces are simply
+        dropped).  ``shardings`` re-shards onto a possibly different mesh
+        — the same elastic path checkpoint restore uses."""
+        if shardings is not None:
+            value = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), snapshot, shardings)
+        else:
+            value = jax.tree.map(jnp.asarray, snapshot)
+        if name in self.state:
+            self.state.update(name, value)
+        else:
+            self.state.put(name, value, kind="train_state")
+        return value
 
     # ------------------------------------------------------------------
     # dryrun: lower the dispatched step against shape stand-ins

@@ -17,11 +17,13 @@ persistence); `wait()` joins before the next save or exit.
 
 from __future__ import annotations
 
+import atexit
 import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+import weakref
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +82,20 @@ def _manifest_of(tree, prefix=""):
             if not hasattr(tree, "dtype") else str(tree.dtype)}
 
 
+def _atexit_wait(ref: "weakref.ref") -> None:
+    """Join a still-running daemon save thread at interpreter exit: the
+    thread would otherwise be killed mid-write, silently truncating the
+    final checkpoint.  Errors are printed, not raised — exit handlers
+    must not mask the process's own exit status."""
+    mgr = ref()
+    if mgr is None:
+        return
+    try:
+        mgr.wait()
+    except Exception as e:                       # pragma: no cover
+        print(f"checkpoint: final async save failed at exit: {e}")
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
@@ -87,6 +103,10 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # daemon save threads die with the interpreter; join them at exit
+        # so the last checkpoint is never torn.  weakref: the handler must
+        # not keep a dead manager (and its state snapshot closure) alive.
+        atexit.register(_atexit_wait, weakref.ref(self))
 
     # ------------------------------------------------------------------
     def save(self, step: int, state, blocking: bool = False):
@@ -142,23 +162,93 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
     def all_steps(self):
-        return [int(d.split("_")[1]) for d in os.listdir(self.dir)
-                if d.startswith("step_")]
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_"):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    continue
+        return out
 
     def latest_step(self) -> Optional[int]:
+        """The ``LATEST`` pointer as written — an *intent*, not a verdict:
+        the pointed-at snapshot may be torn or GC'd (``validate`` /
+        ``restore`` re-judge it)."""
         p = os.path.join(self.dir, "LATEST")
         if not os.path.exists(p):
             return None
-        return int(open(p).read().strip())
+        try:
+            return int(open(p).read().strip())
+        except (ValueError, OSError):
+            return None              # torn pointer write: walk the dirs
+
+    def validate(self, step: int) -> Optional[str]:
+        """Crash-consistency verdict for one snapshot: None when it is
+        complete (manifest parses, every leaf file present and non-empty),
+        else the reason it must not be trusted."""
+        d = os.path.join(self.dir, f"step_{step}")
+        if not os.path.isdir(d):
+            return f"step dir missing: {d}"
+        mpath = os.path.join(d, "manifest.json")
+        try:
+            with open(mpath) as f:
+                manifest = json.load(f)
+        except FileNotFoundError:
+            return f"manifest missing: {mpath}"
+        except (json.JSONDecodeError, OSError) as e:
+            return f"manifest torn: {mpath} ({e})"
+        if "tree" not in manifest:
+            return f"manifest torn: {mpath} (no tree)"
+        for node in _manifest_leaves(manifest["tree"]):
+            fn = os.path.join(d, node["key"].replace("/", "__") + ".npy")
+            try:
+                if os.path.getsize(fn) == 0:
+                    return f"leaf truncated: {fn}"
+            except OSError:
+                return f"leaf missing: {fn}"
+        return None
+
+    def valid_steps(self) -> List[int]:
+        """All complete snapshots, ascending."""
+        return sorted(s for s in self.all_steps()
+                      if self.validate(s) is None)
 
     def restore(self, step: Optional[int] = None,
                 shardings: Optional[Any] = None):
         """Load a checkpoint; if ``shardings`` is given, place each leaf on
-        its (possibly different) target mesh — the elastic re-shard."""
+        its (possibly different) target mesh — the elastic re-shard.
+
+        Crash consistency: an EXPLICIT ``step`` is validated and raises
+        :class:`FileNotFoundError` with the torn/missing reason (the
+        caller asked for that snapshot by name).  With ``step=None`` the
+        ``LATEST`` pointer is only a hint — a torn, missing, or GC'd
+        target makes restore WALK BACK to the newest complete snapshot
+        instead of crashing mid-load, and returns None only when no valid
+        snapshot exists at all.
+        """
         self.wait()
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            return None
+        if step is not None:
+            reason = self.validate(step)
+            if reason is not None:
+                raise FileNotFoundError(
+                    f"checkpoint step {step} is not restorable: {reason}")
+            return self._load(step, shardings)
+        candidates = sorted(self.all_steps(), reverse=True)
+        latest = self.latest_step()
+        if latest is not None and latest in candidates:
+            # try the pointer first, then newer-to-older
+            candidates.remove(latest)
+            candidates.insert(0, latest)
+        for s in candidates:
+            if self.validate(s) is None:
+                if latest is not None and s != latest:
+                    print(f"checkpoint: LATEST -> step {latest} is torn or "
+                          f"missing; walked back to step {s}")
+                return self._load(s, shardings)
+        return None
+
+    def _load(self, step: int, shardings: Optional[Any]):
         d = os.path.join(self.dir, f"step_{step}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)

@@ -98,6 +98,12 @@ def sync_tree(grads, plan: CommsPlan, mesh: Mesh,
     axes = tuple(axes)
     if not axes:
         return grads
+    # fault seam: an armed FaultPlan (repro.faults.set_active) raises
+    # CollectiveTimeout HERE — out of the jit trace, before anything is
+    # compiled or cached — modeling the gradient sync dying mid-step.
+    # The resilient loop's retry re-traces cleanly once the seam disarms.
+    from repro import faults as faults_mod
+    faults_mod.trace_seam("comms.sync_tree")
     sched = plan.resolve(
         mesh, sum(4 * leaf.size for leaf in jax.tree.leaves(grads)))
     bplan = bucketer.plan_buckets(grads, plan.bucket_bytes)

@@ -28,7 +28,25 @@ from repro.core import memory as mem_mod
 from repro.data import Pipeline, Stage, SyntheticLM
 from repro.launch import mesh as mesh_mod
 from repro.obs import report as report_mod
-from repro.train import AdamWConfig, StepTimeWatchdog, warmup_cosine
+from repro.train import AdamWConfig, ResilientStepLoop, StepTimeWatchdog, \
+    warmup_cosine
+
+
+def load_fault_plan(spec: Optional[str]):
+    """``--faults``: a JSON file path or inline JSON — either a list of
+    FaultSpec dicts or ``{"seed": ..., "specs": [...]}``."""
+    if not spec:
+        return None
+    import json
+    from repro.faults import FaultPlan, FaultSpec
+    text = spec
+    if os.path.exists(spec):
+        with open(spec) as f:
+            text = f.read()
+    doc = json.loads(text)
+    seed, specs = (doc.get("seed", 0), doc.get("specs", [])) \
+        if isinstance(doc, dict) else (0, doc)
+    return FaultPlan([FaultSpec(**d) for d in specs], seed=seed)
 
 
 def validate_plan_memory(cfg, mesh, *, batch: int, seq: int,
@@ -119,7 +137,8 @@ def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
         pp_schedule: str = "gpipe", hbm_gib: Optional[float] = None,
         metrics: Optional[str] = None,
         metrics_snapshot: Optional[str] = None,
-        calibration: Optional[str] = None):
+        calibration: Optional[str] = None,
+        resilient: bool = False, faults: Optional[str] = None):
     # Telemetry is strictly opt-in: without --metrics every obs call site
     # sees the NULL singleton, so numerics and stdout are bit-identical
     # to the uninstrumented driver.
@@ -142,7 +161,8 @@ def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
                     mesh=mesh, log_every=log_every, seed=seed, comms=comms,
                     pp=pp, pp_schedule=pp_schedule, hbm_gib=hbm_gib,
                     metrics=metrics, metrics_snapshot=metrics_snapshot,
-                    calibration=calibration)
+                    calibration=calibration, resilient=resilient,
+                    faults=faults)
     finally:
         if calibration:
             from repro.core import calibrate
@@ -153,7 +173,8 @@ def run(arch: str, *, steps: int = 50, batch: int = 8, seq: int = 128,
 
 def _run(arch: str, obs, *, steps, batch, seq, scale_down, lr, microbatches,
          ckpt_dir, ckpt_every, resume, mesh, log_every, seed, comms, pp,
-         pp_schedule, hbm_gib, metrics, metrics_snapshot, calibration=None):
+         pp_schedule, hbm_gib, metrics, metrics_snapshot, calibration=None,
+         resilient=False, faults=None):
     session = Session(mesh=mesh if mesh is not None
                       else mesh_mod.make_host_mesh(pp), hbm_gib=hbm_gib,
                       obs=obs)
@@ -179,12 +200,22 @@ def _run(arch: str, obs, *, steps, batch, seq, scale_down, lr, microbatches,
 
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
     start_step = 0
+    resumed = False
     with jax.set_mesh(session.mesh):
-        if resume and mgr is not None and mgr.latest_step() is not None:
+        if resume and mgr is not None:
+            # restore() walks back past torn/missing snapshots to the
+            # newest complete one (and returns None when nothing valid
+            # survives — then this run starts fresh rather than crashing)
             state = mgr.restore(shardings=plan.state_shardings())
-            start_step = int(jax.device_get(state["opt"]["step"]))
-            session.put("train_state", state, kind="train_state")
-            print(f"resumed from step {start_step}")
+            if state is not None:
+                valid = mgr.valid_steps()
+                start_step = valid[-1] if valid else int(
+                    jax.device_get(state["opt"]["step"]))
+                session.put("train_state", state, kind="train_state")
+                resumed = True
+                print(f"resumed from step {start_step}")
+            else:
+                session.init_state(plan, seed=seed)
         else:
             session.init_state(plan, seed=seed)
 
@@ -203,7 +234,11 @@ def _run(arch: str, obs, *, steps, batch, seq, scale_down, lr, microbatches,
             stages = [Stage("vision_stub", add_vision, "host")]
         else:
             stages = []
-        pipe = Pipeline(source, stages, n_threads=2).start()
+        # the resilient loop needs deterministic batch order (resume
+        # replays the stream to the restored step); 2-thread prefetch
+        # reorders, so it drops to a single worker
+        pipe = Pipeline(source, stages,
+                        n_threads=1 if resilient else 2).start()
 
         def on_anomaly(step, dt, msg):
             # anomaly -> action (watchdog contract): record the event and
@@ -216,8 +251,34 @@ def _run(arch: str, obs, *, steps, batch, seq, scale_down, lr, microbatches,
                 print(f"WATCHDOG: early checkpoint at step {step + 1}")
 
         dog = StepTimeWatchdog(on_anomaly=on_anomaly)
+        if resumed:
+            # restart hygiene: never judge the resumed run against a
+            # step-time distribution learned before the interruption
+            dog.reset()
         losses = []
         last_batch = None
+        if resilient:
+            from repro import faults as faults_mod
+            fault_plan = load_fault_plan(faults)
+            prev_faults = faults_mod.set_active(fault_plan)
+            loop = ResilientStepLoop(session, plan, ckpt=mgr,
+                                     ckpt_every=ckpt_every, watchdog=dog,
+                                     faults=fault_plan)
+            try:
+                out = loop.run(pipe, start_step=start_step, steps=steps)
+            finally:
+                faults_mod.set_active(prev_faults)
+                pipe.stop()
+            losses = [out["losses"][i] for i in sorted(out["losses"])]
+            if out["skipped"]:
+                print(f"resilience: skipped steps {out['skipped']} "
+                      f"(loss scale {out['loss_scale']:.4g})")
+            if fault_plan is not None:
+                import json
+                print("faults:", json.dumps(fault_plan.summary()))
+            if obs.enabled:
+                session.publish_metrics()
+            return losses
         try:
             for i in range(start_step, steps):
                 batch_np = next(pipe)
@@ -300,6 +361,15 @@ def main():
                     help="fitted calibration table (python -m repro.fit) to "
                          "plan and predict with; default: hand-set nominal "
                          "constants")
+    ap.add_argument("--resilient", action="store_true",
+                    help="run the fault-tolerant step loop (rollback/retry "
+                         "on non-finite or timed-out steps, watchdog "
+                         "escalation to a structured abort); forces "
+                         "single-threaded data for deterministic replay")
+    ap.add_argument("--faults", type=str, default=None, metavar="JSON",
+                    help="fault-injection plan for drills: a JSON file or "
+                         "inline JSON list of FaultSpec dicts, e.g. "
+                         '\'[{"seam": "train.nonfinite", "step": 3}]\'')
     args = ap.parse_args()
     try:
         losses = run(args.arch, steps=args.steps, batch=args.batch,
@@ -309,7 +379,8 @@ def main():
                      pp=args.pp, pp_schedule=args.pp_schedule,
                      hbm_gib=args.hbm_gib, metrics=args.metrics,
                      metrics_snapshot=args.metrics_snapshot,
-                     calibration=args.calibration)
+                     calibration=args.calibration,
+                     resilient=args.resilient, faults=args.faults)
     except PlanMemoryError as e:     # plan validation: clean exit, no trace
         raise SystemExit(str(e))
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")

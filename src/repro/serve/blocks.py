@@ -55,7 +55,7 @@ class AdmissionRefusal:
     what the footprint model says it costs, what the pool can hold."""
 
     rid: int
-    reason: str                    # "pool_capacity" | "seq_window"
+    reason: str      # "pool_capacity" | "seq_window" | "preempt_cycle"
     needed_tokens: int
     needed_blocks: int
     capacity_blocks: int

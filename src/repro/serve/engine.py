@@ -39,7 +39,7 @@ from repro import obs as obs_mod
 
 from .blocks import NULL_PAGE, BlockManager, PoolExhausted, \
     kv_bytes_per_block, pool_pages_for_budget
-from .scheduler import Request, Scheduler
+from .scheduler import DeadlineExceeded, Request, Scheduler
 
 __all__ = ["Engine", "ContinuousEngine", "Request"]
 
@@ -122,6 +122,7 @@ class Engine:
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
         self.finished: List[Request] = []
+        self.refused: List[Request] = []     # deadline-shed queued work
 
         # ``opcache`` (a repro.core.opcache.OpCache, normally the owning
         # Session's) makes the jitted steps shared compiled artifacts: a
@@ -183,7 +184,24 @@ class Engine:
                 jnp.asarray(start, jnp.int32))
         return logits, (P - 1) % C if P % C else C - 1 if P else 0
 
+    def _shed_expired(self):
+        """Deadline TTL for queued work (admitted slots always finish):
+        expired requests leave with a structured DeadlineExceeded."""
+        now = time.perf_counter()
+        for req in [r for r in self.queue if r.expired(now)]:
+            self.queue.remove(req)
+            req.refusal = DeadlineExceeded(
+                rid=req.rid, reason="deadline",
+                deadline_s=float(req.deadline_s),
+                waited_s=now - req.submit_t,
+                n_preempted=req.n_preempted)
+            req.done = True
+            req.finish_t = now
+            self.refused.append(req)
+            self.obs.counter("serve.deadline_shed").inc()
+
     def _admit(self):
+        self._shed_expired()
         nb = -(-self.T // self.page_size) if self.paged else 0
         for b in range(self.B):
             if self.active[b] is None and self.queue:
@@ -326,6 +344,10 @@ class ContinuousEngine:
         self.pos = np.zeros(batch_slots, np.int32)
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.finished: List[Request] = []
+        # fault/chaos seams: called as hook(tick) at the top of every
+        # step() — repro.faults.arm_engine registers pool storms here
+        self.tick_hooks: List[Callable[[int], None]] = []
+        self._tick = 0
 
         def _jit(op, build):
             if opcache is None:
@@ -362,6 +384,11 @@ class ContinuousEngine:
     def refused(self) -> List[Request]:
         return list(self.sched.refused)
 
+    @property
+    def shed(self) -> List[Request]:
+        """Queued requests shed on deadline (structured DeadlineExceeded)."""
+        return list(self.sched.shed)
+
     def submit(self, req: Request):
         refusal = self.sched.submit(req)
         if refusal is not None and self.obs.enabled:
@@ -385,6 +412,8 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------------
     def _admit(self):
+        for req in self.sched.shed_expired():
+            self.obs.counter("serve.deadline_shed").inc()
         now = time.perf_counter
         for b in range(self.B):
             if self.active[b] is not None:
@@ -439,15 +468,19 @@ class ContinuousEngine:
 
     def _preempt(self, victim: Request):
         """Free the victim's pages and requeue it at the FRONT (full
-        restart: greedy decode regenerates the same tokens)."""
+        restart: greedy decode regenerates the same tokens).  The
+        scheduler's cycle bound may instead convert a request that keeps
+        circulating into the permanent structured refusal."""
         vb = next(b for b, r in enumerate(self.active) if r is victim)
         self.blocks.free(victim.rid)
         self._table_np[vb] = NULL_PAGE
         self._table_dirty = True
         self.active[vb] = None
         self.pos[vb] = 0
-        self.sched.requeue_preempted(victim)
+        refusal = self.sched.requeue_preempted(victim)
         self.obs.counter("serve.preemptions").inc()
+        if refusal is not None:
+            self.obs.counter("serve.preempt_refused").inc()
 
     def _extend_or_preempt(self, ready: List[int]) -> List[int]:
         """Grow tables so every ready slot can write ``pos[b]``; on pool
@@ -475,6 +508,9 @@ class ContinuousEngine:
     def step(self) -> int:
         """One engine tick: admit, prefill one chunk each, extend/preempt,
         decode one token for every ready slot, retire finished."""
+        for hook in self.tick_hooks:
+            hook(self._tick)
+        self._tick += 1
         self._admit()
         self._prefill_tick()
         ready = [b for b, r in enumerate(self.active)

@@ -1,11 +1,14 @@
-from . import compression, optimizer, step, watchdog
+from . import compression, optimizer, resilience, step, watchdog
 from .optimizer import AdamWConfig, warmup_cosine
+from .resilience import ElasticRunner, ResilienceConfig, ResilientStepLoop, \
+    StepAbort
 from .step import TrainState, build_pipeline_train_step, build_train_step, \
     init_state, state_sds, state_shardings, state_specs
 from .watchdog import StepTimeWatchdog
 
-__all__ = ["compression", "optimizer", "step", "watchdog",
+__all__ = ["compression", "optimizer", "resilience", "step", "watchdog",
            "AdamWConfig", "warmup_cosine", "TrainState", "build_train_step",
            "build_pipeline_train_step",
            "init_state", "state_sds", "state_shardings", "state_specs",
-           "StepTimeWatchdog"]
+           "StepTimeWatchdog", "ElasticRunner", "ResilienceConfig",
+           "ResilientStepLoop", "StepAbort"]

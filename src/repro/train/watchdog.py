@@ -25,11 +25,30 @@ class StepTimeWatchdog:
     mean: float = 0.0
     var: float = 0.0
     n: int = 0
+    ignored: int = 0              # non-finite / non-positive observations
     anomalies: List[int] = dataclasses.field(default_factory=list)
     #: called as on_anomaly(step, dt, msg) for every flagged step
     on_anomaly: Optional[Callable[[int, float, str], None]] = None
 
+    def reset(self) -> None:
+        """Forget the step-time distribution (NOT the hook).  Called on
+        restart/resume: the EMA and variance were learned on the previous
+        attempt's hardware and mesh — carrying them onto a re-planned
+        (possibly smaller, slower-per-step) fleet would flag every healthy
+        step or mask every real straggler."""
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+        self.ignored = 0
+        self.anomalies = []
+
     def observe(self, step: int, dt: float) -> Optional[str]:
+        # a hung-then-killed step reports inf (or a clock glitch reports
+        # <= 0); folding either into the EMA/variance poisons the
+        # estimator forever, so such observations are counted and dropped
+        if not math.isfinite(dt) or dt <= 0.0:
+            self.ignored += 1
+            return None
         self.n += 1
         if self.n <= self.warmup_steps:
             # prime the estimates, never flag during compile/warmup

@@ -1,0 +1,360 @@
+"""repro.faults + resilient loops: the recovery paths themselves.
+
+Fast tests pin the deterministic harness (FaultPlan consumption and
+replay, the trace-time seam, watchdog input guards + reset, deadline
+shedding, the preempt-cycle bound, checkpoint crash consistency).  The
+``slow``-marked tests run the recoveries end-to-end on a tiny model:
+a NaN step rolls back and retries bit-identically to the no-fault
+oracle; a torn checkpoint crash restarts elastically from the newest
+complete snapshot with the merged trajectory matching an uninterrupted
+run; serve deadline pressure sheds queued work with a structured
+refusal while admitted requests finish bit-identically.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.faults import (CollectiveTimeout, FaultPlan, FaultSpec,
+                          set_active, trace_seam, write_torn_checkpoint)
+from repro.serve import AdmissionRefusal, BlockManager, Request, Scheduler
+from repro.serve.scheduler import DeadlineExceeded
+from repro.train import StepAbort, StepTimeWatchdog
+
+TINY = ModelConfig(name="faults-tiny", family="dense", n_layers=2,
+                   d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                   d_ff=64, vocab_size=128)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan (fast, host-only)
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_rejects_unknown_seam():
+    with pytest.raises(ValueError, match="unknown fault seam"):
+        FaultSpec("train.gremlin")
+
+
+def test_fire_consumes_count_at_exact_step():
+    plan = FaultPlan([FaultSpec("train.nonfinite", step=3, count=2)])
+    assert plan.fire("train.nonfinite", 2) is None      # wrong step
+    assert plan.fire("train.straggler", 3) is None      # wrong seam
+    assert plan.fire("train.nonfinite", 3) is not None
+    assert plan.fire("train.nonfinite", 3) is not None
+    assert plan.fire("train.nonfinite", 3) is None      # budget consumed
+    assert (plan.injected(), plan.pending()) == (2, 0)
+    assert plan.summary()["train.nonfinite"] == \
+        {"planned": 2, "injected": 2, "pending": 0}
+    assert [f["step"] for f in plan.fired] == [3, 3]
+
+
+def test_step_none_matches_any_consultation():
+    plan = FaultPlan([FaultSpec("comms.sync_tree")])
+    assert plan.fire("comms.sync_tree", 17) is not None
+    assert plan.fire("comms.sync_tree") is None
+
+
+def test_random_plan_is_seed_deterministic():
+    a = FaultPlan.random(seed=11, steps=20)
+    b = FaultPlan.random(seed=11, steps=20)
+    assert a.specs == b.specs
+    assert all(0 < s.step < 20 for s in a.specs)
+
+
+def test_trace_seam_fires_once_then_retraces_clean():
+    plan = FaultPlan([FaultSpec("comms.sync_tree")])
+    prev = set_active(plan)
+    try:
+        with pytest.raises(CollectiveTimeout):
+            trace_seam("comms.sync_tree")
+        trace_seam("comms.sync_tree")        # disarmed: the clean retry
+    finally:
+        assert set_active(prev) is plan      # returns what we installed
+    assert plan.injected("comms.sync_tree") == 1
+
+
+def test_trace_seam_is_inert_without_active_plan():
+    assert set_active(None) is None or True  # ensure disarmed
+    trace_seam("comms.sync_tree")            # no plan: must not raise
+
+
+# ---------------------------------------------------------------------------
+# StepTimeWatchdog guards (fast)
+# ---------------------------------------------------------------------------
+
+def test_watchdog_drops_nonfinite_and_nonpositive_dt():
+    dog = StepTimeWatchdog(warmup_steps=2)
+    for bad in (float("inf"), float("nan"), 0.0, -0.5):
+        assert dog.observe(0, bad) is None
+    assert (dog.n, dog.ignored) == (0, 4)    # estimator untouched
+    dog.observe(1, 0.01)
+    assert dog.n == 1 and dog.mean == pytest.approx(0.01)
+
+
+def test_watchdog_flags_straggler_and_reset_keeps_hook():
+    seen = []
+    dog = StepTimeWatchdog(warmup_steps=3, z_threshold=4.0,
+                           on_anomaly=lambda s, dt, msg: seen.append(s))
+    for i in range(8):
+        assert dog.observe(i, 0.010 + 0.0001 * (i % 2)) is None
+    msg = dog.observe(8, 1.0)
+    assert msg is not None and "straggler" in msg
+    assert dog.anomalies == [8] and seen == [8]
+    dog.reset()
+    assert (dog.n, dog.mean, dog.var, dog.ignored, dog.anomalies) \
+        == (0, 0.0, 0.0, 0, [])
+    assert dog.on_anomaly is not None        # reset forgets stats, not wiring
+
+
+def test_step_abort_carries_structured_fields():
+    e = StepAbort("watchdog_escalation", step=7, checkpoint_step=8,
+                  detail="3 anomalies")
+    assert (e.reason, e.step, e.checkpoint_step) \
+        == ("watchdog_escalation", 7, 8)
+    assert "checkpoint at step 8" in str(e)
+
+
+# ---------------------------------------------------------------------------
+# Serve degradation: deadline shedding + preempt-cycle bound (fast)
+# ---------------------------------------------------------------------------
+
+def _sched(**kw):
+    blocks = BlockManager(TINY, num_pages=9, page_size=8, max_seq=64)
+    return Scheduler(blocks, **kw)
+
+
+def test_shed_expired_is_structured_and_spares_admitted():
+    sched = _sched()
+    doomed = Request(rid=1, prompt=np.zeros(8, np.int32),
+                     max_new_tokens=8, deadline_s=1e-9)
+    patient = Request(rid=2, prompt=np.zeros(8, np.int32),
+                      max_new_tokens=8)                  # no TTL
+    running = Request(rid=3, prompt=np.zeros(8, np.int32),
+                      max_new_tokens=8, deadline_s=1e-9)
+    for r in (doomed, patient, running):
+        sched.submit(r)
+    running.admit_t = running.submit_t       # admission stops the clock
+    shed = sched.shed_expired()
+    assert [r.rid for r in shed] == [1] and sched.shed == shed
+    ref = doomed.refusal
+    assert isinstance(ref, DeadlineExceeded) and ref.reason == "deadline"
+    assert ref.waited_s > ref.deadline_s and doomed.done
+    assert ref.to_dict()["rid"] == 1 and "deadline" in ref.describe()
+    assert [r.rid for r in sched.queue] == [2, 3]        # never silently lost
+
+
+def test_preempt_cycle_converts_to_permanent_refusal():
+    sched = _sched(max_preempt_restarts=2)
+    req = Request(rid=9, prompt=np.zeros(8, np.int32), max_new_tokens=8)
+    sched.submit(req)
+    sched.queue.remove(req)                  # "admit" it
+    assert sched.requeue_preempted(req) is None
+    assert sched.queue[0] is req             # requeued at the FRONT
+    sched.queue.remove(req)
+    assert sched.requeue_preempted(req) is None
+    sched.queue.remove(req)
+    ref = sched.requeue_preempted(req)       # third strike: permanent
+    assert isinstance(ref, AdmissionRefusal)
+    assert ref.reason == "preempt_cycle" and req.done
+    assert req in sched.refused and req not in sched.queue
+    assert req.n_preempted == 3
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint crash consistency (fast)
+# ---------------------------------------------------------------------------
+
+def _state(v: float):
+    return {"params": {"w": np.full((4, 4), v, np.float32)},
+            "opt": {"step": np.int32(int(v))}}
+
+
+def test_restore_walks_back_past_torn_snapshot(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, _state(3.0), blocking=True)
+    write_torn_checkpoint(mgr, 6, _state(6.0))
+    assert mgr.latest_step() == 6            # the pointer trusts the torn one
+    assert "torn" in mgr.validate(6)
+    assert mgr.valid_steps() == [3]
+    restored = mgr.restore()                 # walks back instead of crashing
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  _state(3.0)["params"]["w"])
+    with pytest.raises(FileNotFoundError, match="not restorable"):
+        mgr.restore(step=6)                  # explicit ask: loud failure
+
+
+def test_restore_survives_garbage_latest_pointer(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, _state(2.0), blocking=True)
+    with open(os.path.join(str(tmp_path), "LATEST"), "w") as f:
+        f.write("not-a-step")
+    assert mgr.latest_step() is None
+    restored = mgr.restore()
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  _state(2.0)["params"]["w"])
+
+
+def test_validate_catches_missing_and_empty_leaves(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state(1.0), blocking=True)
+    leaf = os.path.join(str(tmp_path), "step_1", "params__w.npy")
+    os.truncate(leaf, 0)
+    assert "truncated" in mgr.validate(1)
+    os.remove(leaf)
+    assert "missing" in mgr.validate(1)
+    assert mgr.valid_steps() == [] and mgr.restore() is None
+
+
+# ---------------------------------------------------------------------------
+# End-to-end recovery drills (slow, tiny model)
+# ---------------------------------------------------------------------------
+
+B, SEQ = 4, 16
+
+
+def _session(obs=None):
+    import jax
+
+    from repro import obs as obs_mod
+    from repro.api import Session
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    sess = Session(mesh=mesh, obs=obs or obs_mod.NULL)
+    plan = sess.plan(TINY, batch=B, seq=SEQ,
+                     model_kwargs=dict(q_chunk=16, kv_chunk=16))
+    return sess, plan
+
+
+def _data():
+    from repro.data import SyntheticLM
+    return SyntheticLM(TINY.vocab_size, B, SEQ, seed=0, structured=True)
+
+
+def _run_loop(faults=None, obs=None, steps=6, **loop_kw):
+    import jax
+
+    from repro.train import ResilientStepLoop
+    from repro.train.resilience import ResilienceConfig
+
+    sess, plan = _session(obs)
+    with jax.set_mesh(sess.mesh):
+        sess.init_state(plan, seed=0)
+        loop = ResilientStepLoop(
+            sess, plan, faults=faults,
+            config=ResilienceConfig(backoff_base_s=0.01), **loop_kw)
+        return loop.run(iter(_data()), start_step=0, steps=steps)
+
+
+@pytest.mark.slow
+def test_nonfinite_rollback_and_timeout_retry_are_bitwise(tmp_path):
+    """A NaN-poisoned step rolls back + retries the SAME batch; a
+    collective timeout backs off + retries — both leave the trajectory
+    bit-identical to the no-fault oracle (§2 req. e without drift)."""
+    from repro import obs as obs_mod
+
+    oracle = _run_loop()
+    obs = obs_mod.Obs(name="test/faults")
+    faults = FaultPlan([FaultSpec("train.nonfinite", step=2),
+                        FaultSpec("comms.timeout", step=3)])
+    out = _run_loop(faults=faults, obs=obs)
+    assert faults.pending() == 0             # everything planned fired
+    assert out["skipped"] == []              # recovered, not skipped
+    assert out["losses"] == oracle["losses"]  # bitwise, every step
+    assert obs.counter("resil.rollbacks").value >= 1
+    assert obs.counter("resil.retries").value >= 1
+
+
+@pytest.mark.slow
+def test_torn_checkpoint_elastic_restart_matches_oracle(tmp_path):
+    """Kill-mid-write at checkpoint label 6 -> HostCrash -> the elastic
+    driver restores the newest COMPLETE snapshot (4), replays the
+    deterministic pipeline, and the merged trajectory is bit-identical
+    to an uninterrupted run."""
+    import jax
+
+    from repro import obs as obs_mod
+    from repro.train import ElasticRunner
+    from repro.train.resilience import ResilienceConfig
+
+    steps, every = 8, 2
+    oracle = _run_loop(steps=steps)
+
+    obs = obs_mod.Obs(name="test/elastic")
+    faults = FaultPlan([FaultSpec("checkpoint.torn", step=6)])
+    mgr = CheckpointManager(str(tmp_path))
+    runner = ElasticRunner(
+        lambda attempt: _session(obs), _data,
+        ckpt=mgr, steps=steps, ckpt_every=every,
+        config=ResilienceConfig(backoff_base_s=0.01), faults=faults)
+    out = runner.run()
+
+    assert out["attempts"] == 2 and len(out["restarts"]) == 1
+    rec = out["restarts"][0]
+    assert rec["reason"] == "checkpoint.torn"
+    assert rec["abort_step"] == 6            # the torn label
+    assert rec["restored_step"] == 4         # walked back past the torn one
+    assert out["losses"] == oracle["losses"]
+    assert obs.counter("resil.torn_checkpoints").value == 1
+    assert mgr.valid_steps()[-1] == steps    # the final save is complete
+
+
+@pytest.mark.slow
+def test_serve_deadline_shed_spares_admitted_bitwise():
+    """Expired queued requests are shed with a structured
+    DeadlineExceeded; the admitted ones finish with outputs
+    bit-identical to a pressure-free run."""
+    import jax
+
+    from repro.core.planner import plan_for
+    from repro.launch.mesh import make_mesh
+    from repro.models import Model
+    from repro.serve import ContinuousEngine
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with jax.set_mesh(mesh):
+        model = Model(TINY, mesh, plan_for(TINY, mesh),
+                      q_chunk=16, kv_chunk=16)
+        params = jax.device_put(model.init(jax.random.PRNGKey(0)),
+                                model.param_shardings())
+        rng = np.random.default_rng(5)
+
+        def reqs(with_deadlines):
+            out = [Request(rid=r,
+                           prompt=rng.integers(0, TINY.vocab_size, 8,
+                                               dtype=np.int32),
+                           max_new_tokens=6) for r in range(3)]
+            if with_deadlines:
+                out += [Request(rid=100 + i,
+                                prompt=np.zeros(8, np.int32),
+                                max_new_tokens=6, deadline_s=1e-9)
+                        for i in range(2)]
+            return out
+
+        def engine():
+            return ContinuousEngine(model, params, batch_slots=2,
+                                    max_seq=64, page_size=8,
+                                    prefill_chunk=8)
+
+        rng = np.random.default_rng(5)
+        eng0 = engine()
+        for r in reqs(with_deadlines=False):
+            eng0.submit(r)
+        eng0.run()
+        oracle = {r.rid: list(r.out) for r in eng0.finished}
+
+        rng = np.random.default_rng(5)       # same prompts again
+        eng = engine()
+        for r in reqs(with_deadlines=True):
+            eng.submit(r)
+        eng.run()
+        drill = {r.rid: list(r.out) for r in eng.finished}
+
+    assert sorted(r.rid for r in eng.shed) == [100, 101]
+    for r in eng.shed:
+        assert isinstance(r.refusal, DeadlineExceeded)
+        assert r.refusal.reason == "deadline" and r.done
+    assert drill == oracle                   # admitted work is untouched
